@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

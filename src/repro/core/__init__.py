@@ -1,0 +1,11 @@
+"""The paper's contribution:
+
+``repro.core.hext`` — bit-accurate, batched (vmap-over-harts) functional
+simulator of the RISC-V H (hypervisor) extension: CSR file with WARL masks /
+aliases / VS swapping, trap & interrupt delegation, two-stage Sv39/Sv39x4
+translation, two-stage TLB, hypervisor load/store instructions, and a mini
+type-1 hypervisor ("xvisor-lite") running MiBench-like guest workloads.
+
+``repro.core.vmem`` — the TPU-native lift of the same mechanism: two-stage
+paged virtual memory for multi-tenant LLM KV caches.
+"""

@@ -1,0 +1,1 @@
+from repro.core.hext import csr, isa, machine, programs, translate, trap  # noqa: F401

@@ -1,0 +1,353 @@
+"""CSR file for RV64 + H extension (paper §3.1, Table 1).
+
+Storage is a flat uint64 vector per hart, indexed by the ``R_*`` constants.
+Architectural behaviors implemented bit-accurately:
+
+* READ masks (some fields read as zero at lower privileges),
+* WRITE masks (WARL: read-only fields are preserved on write — the paper's
+  added "WRITE REGISTERS MASKS"),
+* aliasing (``sstatus`` ⊂ ``mstatus``; ``sip/sie`` ⊂ ``mip/mie``;
+  ``hvip/hip/hie`` alias the VS bits of ``mip/mie``; ``vsip/vsie`` are the
+  VS bits *shifted down by 1* so the guest sees them at S positions),
+* VS swapping: with V=1, supervisor CSR numbers access the ``vs*`` bank
+  (paper: "accessing supervisor CSRs in VS mode is redirected"),
+* privilege/virtualization access faults: accessing a higher-privilege CSR
+  raises illegal-instruction; accessing H/S CSRs from VS/VU raises
+  virtual-instruction (cause 22).
+
+All functions are branchless (jnp.where chains over the known address set)
+so they trace into a fixed graph and vmap over harts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U64 = jnp.uint64
+
+
+def u64(x) -> jnp.ndarray:
+    return jnp.asarray(x, U64)
+
+
+# --- privilege encodings ----------------------------------------------------
+PRV_U, PRV_S, PRV_M = 0, 1, 3
+
+# --- internal storage indices ------------------------------------------------
+(R_MSTATUS, R_MEDELEG, R_MIDELEG, R_MIE, R_MTVEC, R_MSCRATCH, R_MEPC,
+ R_MCAUSE, R_MTVAL, R_MIP, R_MTVAL2, R_MTINST,
+ R_STVEC, R_SSCRATCH, R_SEPC, R_SCAUSE, R_STVAL, R_SATP, R_SCOUNTEREN,
+ R_HSTATUS, R_HEDELEG, R_HIDELEG, R_HVIP, R_HGEIP, R_HGEIE, R_HCOUNTEREN,
+ R_HTVAL, R_HTINST, R_HGATP,
+ R_VSSTATUS, R_VSTVEC, R_VSSCRATCH, R_VSEPC, R_VSCAUSE, R_VSTVAL, R_VSATP,
+ R_MCOUNTEREN, R_MISA,
+ N_CSR) = range(39)
+
+# --- architectural CSR addresses ---------------------------------------------
+CSR_ADDR = {
+    # M
+    0x300: R_MSTATUS, 0x301: R_MISA, 0x302: R_MEDELEG, 0x303: R_MIDELEG,
+    0x304: R_MIE, 0x305: R_MTVEC, 0x306: R_MCOUNTEREN,
+    0x340: R_MSCRATCH, 0x341: R_MEPC, 0x342: R_MCAUSE, 0x343: R_MTVAL,
+    0x344: R_MIP, 0x34B: R_MTVAL2, 0x34A: R_MTINST,
+    # S (0x100 sstatus / 0x104 sie / 0x144 sip handled as aliases)
+    0x105: R_STVEC, 0x106: R_SCOUNTEREN, 0x140: R_SSCRATCH, 0x141: R_SEPC,
+    0x142: R_SCAUSE, 0x143: R_STVAL, 0x180: R_SATP,
+    # H
+    0x600: R_HSTATUS, 0x602: R_HEDELEG, 0x603: R_HIDELEG, 0x604: None,  # hie
+    0x605: None,  # htimedelta (unimpl → 0)
+    0x606: R_HCOUNTEREN, 0x607: R_HGEIE, 0x643: R_HTVAL, 0x644: None,  # hip
+    0x645: R_HVIP, 0x64A: R_HTINST, 0x680: R_HGATP, 0xE12: R_HGEIP,
+    # VS
+    0x200: R_VSSTATUS, 0x204: None,  # vsie
+    0x205: R_VSTVEC, 0x240: R_VSSCRATCH, 0x241: R_VSEPC, 0x242: R_VSCAUSE,
+    0x243: R_VSTVAL, 0x244: None,  # vsip
+    0x280: R_VSATP,
+}
+
+# --- mstatus fields ----------------------------------------------------------
+MSTATUS_SIE = 1 << 1
+MSTATUS_MIE = 1 << 3
+MSTATUS_SPIE = 1 << 5
+MSTATUS_MPIE = 1 << 7
+MSTATUS_SPP = 1 << 8
+MSTATUS_MPP = 3 << 11
+MSTATUS_FS = 3 << 13
+MSTATUS_SUM = 1 << 18
+MSTATUS_MXR = 1 << 19
+MSTATUS_TVM = 1 << 20
+MSTATUS_TW = 1 << 21
+MSTATUS_TSR = 1 << 22
+MSTATUS_MPV = 1 << 39   # H: previous virtualization mode
+MSTATUS_GVA = 1 << 38   # H: guest virtual address
+
+SSTATUS_MASK = (MSTATUS_SIE | MSTATUS_SPIE | MSTATUS_SPP | MSTATUS_FS |
+                MSTATUS_SUM | MSTATUS_MXR)
+MSTATUS_WMASK = (SSTATUS_MASK | MSTATUS_MIE | MSTATUS_MPIE | MSTATUS_MPP |
+                 MSTATUS_TVM | MSTATUS_TW | MSTATUS_TSR | MSTATUS_MPV |
+                 MSTATUS_GVA)
+
+# --- hstatus fields ----------------------------------------------------------
+HSTATUS_VSBE = 1 << 5
+HSTATUS_GVA = 1 << 6
+HSTATUS_SPV = 1 << 7     # supervisor previous virtualization
+HSTATUS_SPVP = 1 << 8    # supervisor previous virtual privilege
+HSTATUS_HU = 1 << 9      # hypervisor-in-U (allows hlv/hsv from U)
+HSTATUS_VTVM = 1 << 20
+HSTATUS_VTW = 1 << 21
+HSTATUS_VTSR = 1 << 22
+HSTATUS_WMASK = (HSTATUS_GVA | HSTATUS_SPV | HSTATUS_SPVP | HSTATUS_HU |
+                 HSTATUS_VTVM | HSTATUS_VTW | HSTATUS_VTSR)
+
+# --- interrupt bits (mip/mie layout) -----------------------------------------
+IP_SSIP = 1 << 1
+IP_VSSIP = 1 << 2
+IP_MSIP = 1 << 3
+IP_STIP = 1 << 5
+IP_VSTIP = 1 << 6
+IP_MTIP = 1 << 7
+IP_SEIP = 1 << 9
+IP_VSEIP = 1 << 10
+IP_MEIP = 1 << 11
+IP_SGEIP = 1 << 12
+
+HS_INTERRUPTS = IP_VSSIP | IP_VSTIP | IP_VSEIP | IP_SGEIP   # hip/hvip-visible
+VS_INTERRUPTS = IP_VSSIP | IP_VSTIP | IP_VSEIP
+S_INTERRUPTS = IP_SSIP | IP_STIP | IP_SEIP
+HVIP_WMASK = VS_INTERRUPTS                                  # hvip writable bits
+# mideleg: VS-level interrupts + SGEI are *read-only one* with H (paper §3.1:
+# "new read-only 1-bit fields ... these interrupts are now handled by HS")
+MIDELEG_FORCED = HS_INTERRUPTS
+MIDELEG_WMASK = S_INTERRUPTS
+MIP_WMASK = IP_SSIP | IP_STIP | IP_SEIP | VS_INTERRUPTS | IP_MSIP | IP_MTIP
+MIE_WMASK = MIP_WMASK | IP_MEIP | IP_SGEIP
+
+# hideleg: only VS-level interrupts delegable to VS
+HIDELEG_WMASK = VS_INTERRUPTS
+
+# --- exception causes ---------------------------------------------------------
+EXC_IADDR_MISALIGNED = 0
+EXC_IACCESS = 1
+EXC_ILLEGAL = 2
+EXC_BREAK = 3
+EXC_LADDR_MISALIGNED = 4
+EXC_LACCESS = 5
+EXC_SADDR_MISALIGNED = 6
+EXC_SACCESS = 7
+EXC_ECALL_U = 8
+EXC_ECALL_S = 9         # ecall from HS (or S)
+EXC_ECALL_VS = 10       # ecall from VS
+EXC_ECALL_M = 11
+EXC_IPAGE_FAULT = 12
+EXC_LPAGE_FAULT = 13
+EXC_SPAGE_FAULT = 15
+EXC_IGUEST_PAGE_FAULT = 20
+EXC_LGUEST_PAGE_FAULT = 21
+EXC_VIRTUAL_INSTRUCTION = 22
+EXC_SGUEST_PAGE_FAULT = 23
+
+# hedeleg cannot delegate guest-page-faults / ecalls-from-HS etc. to VS
+HEDELEG_WMASK = ((1 << EXC_IADDR_MISALIGNED) | (1 << EXC_IACCESS) |
+                 (1 << EXC_ILLEGAL) | (1 << EXC_BREAK) |
+                 (1 << EXC_LADDR_MISALIGNED) | (1 << EXC_LACCESS) |
+                 (1 << EXC_SADDR_MISALIGNED) | (1 << EXC_SACCESS) |
+                 (1 << EXC_ECALL_U) | (1 << EXC_IPAGE_FAULT) |
+                 (1 << EXC_LPAGE_FAULT) | (1 << EXC_SPAGE_FAULT))
+MEDELEG_WMASK = HEDELEG_WMASK | (1 << EXC_ECALL_S) | (1 << EXC_ECALL_VS) | \
+    (1 << EXC_VIRTUAL_INSTRUCTION) | (1 << EXC_IGUEST_PAGE_FAULT) | \
+    (1 << EXC_LGUEST_PAGE_FAULT) | (1 << EXC_SGUEST_PAGE_FAULT)
+
+INT_BIT = 1 << 63
+
+# satp/hgatp/vsatp
+ATP_MODE_SHIFT = 60
+ATP_MODE_SV39 = 8
+ATP_PPN_MASK = (1 << 44) - 1
+
+
+def init_csrs():
+    c = jnp.zeros((N_CSR,), U64)
+    # misa: RV64 + H + I + M + S + U
+    misa = (2 << 62) | (1 << 7) | (1 << 8) | (1 << 12) | (1 << 18) | (1 << 20)
+    c = c.at[R_MISA].set(u64(misa))
+    c = c.at[R_MIDELEG].set(u64(MIDELEG_FORCED))  # forced-one VS bits
+    return c
+
+
+# -----------------------------------------------------------------------------
+# Read / write with aliasing + VS swapping. All args traced uint64/int32.
+# -----------------------------------------------------------------------------
+
+def _sel(cond, a, b):
+    return jnp.where(cond, a, b)
+
+
+def csr_min_priv(addr):
+    """CSR address bits [9:8] encode the minimum privilege."""
+    return (addr >> 8) & 3
+
+
+def csr_read(csrs, addr, priv, virt):
+    """Returns (value, ok, vinst_fault).
+
+    ok=False → illegal instruction; vinst_fault → virtual-instruction trap
+    (V=1 access to H/S-above CSRs)."""
+    a = addr
+    mstatus = csrs[R_MSTATUS]
+    mip = csrs[R_MIP]
+    mie = csrs[R_MIE]
+    hideleg = csrs[R_HIDELEG]
+
+    # --- VS swapping: with V=1, supervisor addresses hit the vs bank -------
+    swap = {0x100: R_VSSTATUS, 0x105: R_VSTVEC, 0x140: R_VSSCRATCH,
+            0x141: R_VSEPC, 0x142: R_VSCAUSE, 0x143: R_VSTVAL,
+            0x180: R_VSATP}
+
+    val = u64(0)
+    known = jnp.zeros((), bool)
+
+    def hit(addr_const, v):
+        nonlocal val, known
+        m = a == addr_const
+        val = _sel(m, v, val)
+        known = known | m
+
+    # aliases / computed CSRs
+    sstatus = mstatus & u64(SSTATUS_MASK)
+    vsstatus = csrs[R_VSSTATUS] & u64(SSTATUS_MASK)
+    mideleg = csrs[R_MIDELEG]
+    sip = mip & mideleg & u64(S_INTERRUPTS)
+    sie = mie & mideleg & u64(S_INTERRUPTS)
+    hip = mip & u64(HS_INTERRUPTS)
+    hie = mie & u64(HS_INTERRUPTS)
+    hvip = mip & u64(VS_INTERRUPTS)
+    # vsip/vsie: VS bits shifted down 1 to S positions, gated by hideleg
+    vsip = (mip & hideleg & u64(VS_INTERRUPTS)) >> u64(1)
+    vsie = (mie & hideleg & u64(VS_INTERRUPTS)) >> u64(1)
+
+    hit(0x100, _sel(virt, vsstatus, sstatus))
+    hit(0x104, _sel(virt, vsie, sie))
+    hit(0x144, _sel(virt, vsip, sip))
+    hit(0x604, hie)
+    hit(0x644, hip)
+    hit(0x645, hvip)
+    hit(0x204, vsie)
+    hit(0x244, vsip)
+    hit(0x605, u64(0))  # htimedelta: 0
+
+    for addr_const, idx in CSR_ADDR.items():
+        if idx is None or addr_const in (0x100, 0x104, 0x144, 0x604, 0x644,
+                                         0x645, 0x204, 0x244, 0x605):
+            continue
+        v = csrs[idx]
+        if addr_const in swap:
+            v = _sel(virt, csrs[swap[addr_const]], v)
+        hit(addr_const, v)
+
+    # --- privilege checks ----------------------------------------------------
+    # CSR addr bits [9:8]: 0=U,1=S,2=H(HS-level),3=M. H-level CSRs are
+    # accessible from HS (priv=S, V=0); from VS/VU they raise
+    # virtual-instruction (cause 22), per the H spec.
+    minp = csr_min_priv(a).astype(priv.dtype)
+    is_h_csr = minp == 2
+    req = jnp.where(is_h_csr, 1, minp)
+    vinst = virt & is_h_csr & (priv < 3)
+    # hstatus.VTVM: VS access to satp traps as virtual instruction
+    vtvm = (csrs[R_HSTATUS] & u64(HSTATUS_VTVM)) != 0
+    vinst = vinst | (virt & (a == 0x180) & vtvm & (priv < 3))
+    priv_ok = priv >= req
+    ok = known & priv_ok & jnp.logical_not(vinst)
+    return val, ok, vinst & known
+
+
+def csr_write(csrs, addr, value, priv, virt):
+    """Returns (new_csrs, ok, vinst_fault). Applies WARL write masks and
+    aliasing writes (paper: WRITE REGISTERS MASKS)."""
+    a = addr
+    v = value
+
+    def wr(c, idx, val, mask):
+        old = c[idx]
+        nv = (old & ~u64(mask)) | (val & u64(mask))
+        return c.at[idx].set(nv)
+
+    new = csrs
+    known = jnp.zeros((), bool)
+
+    # Because csrs is a flat vector we can jnp.where whole-vector updates.
+    def case_v(addr_const, cand):
+        nonlocal new, known
+        m = a == addr_const
+        new = jnp.where(m, cand, new)
+        known = known | m
+
+    full = ~u64(0)
+    mideleg = csrs[R_MIDELEG]
+    hideleg = csrs[R_HIDELEG]
+
+    # mstatus (WARL)
+    case_v(0x300, wr(csrs, R_MSTATUS, v, MSTATUS_WMASK))
+    # sstatus: alias into mstatus (or vsstatus when V=1)
+    sstat_m = wr(csrs, R_MSTATUS, v, SSTATUS_MASK)
+    sstat_v = wr(csrs, R_VSSTATUS, v, SSTATUS_MASK)
+    case_v(0x100, jnp.where(virt, sstat_v, sstat_m))
+    case_v(0x200, wr(csrs, R_VSSTATUS, v, SSTATUS_MASK))
+    # interrupt enables: sie aliases mie (masked by mideleg); vsie shifts up
+    sie_m = wr(csrs, R_MIE, v, S_INTERRUPTS)
+    vsie_shift = (v << u64(1)) & hideleg & u64(VS_INTERRUPTS)
+    vsie_w = wr(csrs, R_MIE, vsie_shift, VS_INTERRUPTS)
+    case_v(0x104, jnp.where(virt, vsie_w, sie_m))
+    case_v(0x204, vsie_w)
+    case_v(0x304, wr(csrs, R_MIE, v, MIE_WMASK))
+    case_v(0x604, wr(csrs, R_MIE, v, HS_INTERRUPTS))
+    # interrupt pendings: sip.SSIP writable; hvip VS bits; vsip.SSIP→VSSIP
+    sip_m = wr(csrs, R_MIP, v, IP_SSIP)
+    vsip_shift = (v << u64(1)) & hideleg & u64(IP_VSSIP)
+    vsip_w = wr(csrs, R_MIP, vsip_shift, IP_VSSIP)
+    case_v(0x144, jnp.where(virt, vsip_w, sip_m))
+    case_v(0x244, vsip_w)
+    case_v(0x344, wr(csrs, R_MIP, v, MIP_WMASK))
+    case_v(0x645, wr(csrs, R_MIP, v, HVIP_WMASK))  # hvip aliases mip VS bits
+    case_v(0x644, wr(csrs, R_MIP, v, IP_VSSIP))    # hip: only VSSIP writable
+    # delegation
+    case_v(0x302, wr(csrs, R_MEDELEG, v, MEDELEG_WMASK))
+    case_v(0x303, wr(csrs, R_MIDELEG, v, MIDELEG_WMASK))  # VS bits read-only-1
+    case_v(0x602, wr(csrs, R_HEDELEG, v, HEDELEG_WMASK))
+    case_v(0x603, wr(csrs, R_HIDELEG, v, HIDELEG_WMASK))
+    # plain registers (with VS swapping where applicable)
+    plain = {0x305: (R_MTVEC, full), 0x306: (R_MCOUNTEREN, full),
+             0x340: (R_MSCRATCH, full), 0x341: (R_MEPC, ~u64(1)),
+             0x342: (R_MCAUSE, full), 0x343: (R_MTVAL, full),
+             0x34B: (R_MTVAL2, full), 0x34A: (R_MTINST, full),
+             0x106: (R_SCOUNTEREN, full),
+             0x600: (R_HSTATUS, HSTATUS_WMASK), 0x606: (R_HCOUNTEREN, full),
+             0x607: (R_HGEIE, full), 0x643: (R_HTVAL, full),
+             0x64A: (R_HTINST, full), 0x680: (R_HGATP, full),
+             0x205: (R_VSTVEC, full), 0x240: (R_VSSCRATCH, full),
+             0x241: (R_VSEPC, ~u64(1)), 0x242: (R_VSCAUSE, full),
+             0x243: (R_VSTVAL, full), 0x280: (R_VSATP, full)}
+    for addr_const, (idx, mask) in plain.items():
+        case_v(addr_const, wr(csrs, idx, v, mask))
+    swap = {0x105: (R_STVEC, R_VSTVEC), 0x140: (R_SSCRATCH, R_VSSCRATCH),
+            0x141: (R_SEPC, R_VSEPC), 0x142: (R_SCAUSE, R_VSCAUSE),
+            0x143: (R_STVAL, R_VSTVAL), 0x180: (R_SATP, R_VSATP)}
+    for addr_const, (sidx, vidx) in swap.items():
+        mask = ~u64(1) if addr_const == 0x141 else full
+        case_v(addr_const,
+               jnp.where(virt, wr(csrs, vidx, v, mask),
+                         wr(csrs, sidx, v, mask)))
+    # read-only CSRs (hgeip, misa treated RO here): write ignored but legal @M
+    case_v(0xE12, csrs)
+    case_v(0x301, csrs)
+    case_v(0x605, csrs)
+
+    minp = csr_min_priv(a).astype(priv.dtype)
+    is_h_csr = minp == 2
+    req = jnp.where(is_h_csr, 1, minp)
+    vinst = virt & is_h_csr & (priv < 3)
+    vtvm = (csrs[R_HSTATUS] & u64(HSTATUS_VTVM)) != 0
+    vinst = vinst | (virt & (a == 0x180) & vtvm & (priv < 3))
+    read_only = (a >> 10) == 3    # addr[11:10]==11 → read-only region
+    priv_ok = priv >= req
+    ok = known & priv_ok & jnp.logical_not(vinst) & jnp.logical_not(
+        read_only.astype(bool))
+    return new, ok, vinst & known

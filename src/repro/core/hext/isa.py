@@ -1,0 +1,590 @@
+"""RV64IM + Zicsr + H-extension decode/execute, branchless JAX.
+
+Covers: LUI/AUIPC/JAL/JALR/branches, loads/stores (B/H/W/D, aligned),
+OP/OP-IMM (+W forms), M extension (MUL/MULH*/DIV*/REM* + W forms),
+CSR instructions, ECALL/EBREAK/SRET/MRET/WFI, SFENCE.VMA,
+HFENCE.VVMA/HFENCE.GVMA, and the hypervisor loads/stores
+HLV.{B,BU,H,HU,W,WU,D} / HLVX.{HU,WU} / HSV.{B,H,W,D} (paper §3.3's
+XlateFlags: forced-virtualization + HLVX execute-permission reads).
+
+``execute`` works on the machine-state dict and returns
+(new_state, Fault) — machine.step merges on fault.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hext import csr as C
+from repro.core.hext import tlb as TLB
+from repro.core.hext import translate as X
+
+U64 = jnp.uint64
+I64 = jnp.int64
+INT_MIN = -(1 << 63)
+
+
+def _u(x):
+    return jnp.asarray(x, U64)
+
+
+def _i(x):
+    return jnp.asarray(x, I64)
+
+
+def sext(x, bits):
+    """Sign-extend the low `bits` of uint64 x (upper bits ignored)."""
+    x = _u(x) & _u((1 << bits) - 1)
+    m = _u(1 << (bits - 1))
+    return ((x ^ m) - m)
+
+
+class Fault(NamedTuple):
+    fault: jnp.ndarray
+    cause: jnp.ndarray      # uint64
+    tval: jnp.ndarray       # uint64
+    tval2: jnp.ndarray      # uint64
+    gva: jnp.ndarray        # bool
+    tinst: jnp.ndarray      # uint64
+
+
+def no_fault():
+    z = _u(0)
+    return Fault(jnp.zeros((), bool), z, z, z, jnp.zeros((), bool), z)
+
+
+def mk_fault(cond, cause, tval=0, tval2=0, gva=False, tinst=0):
+    return Fault(jnp.asarray(cond, bool), _u(cause), _u(tval), _u(tval2),
+                 jnp.asarray(gva, bool), _u(tinst))
+
+
+def merge_fault(f1: Fault, f2: Fault) -> Fault:
+    """f1 wins if set."""
+    pick = f1.fault
+    return Fault(f1.fault | f2.fault,
+                 jnp.where(pick, f1.cause, f2.cause),
+                 jnp.where(pick, f1.tval, f2.tval),
+                 jnp.where(pick, f1.tval2, f2.tval2),
+                 jnp.where(pick, f1.gva, f2.gva),
+                 jnp.where(pick, f1.tinst, f2.tinst))
+
+
+# ---------------------------------------------------------------------------
+# 64-bit helpers (mulh / div semantics)
+# ---------------------------------------------------------------------------
+
+def _abs_u(a):
+    neg = _i(a) < 0
+    return jnp.where(neg, (~_u(a)) + _u(1), _u(a)), neg
+
+
+def mulhu(a, b):
+    a, b = _u(a), _u(b)
+    m32 = _u(0xFFFFFFFF)
+    a0, a1 = a & m32, a >> _u(32)
+    b0, b1 = b & m32, b >> _u(32)
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    mid = (ll >> _u(32)) + (lh & m32) + (hl & m32)
+    return a1 * b1 + (lh >> _u(32)) + (hl >> _u(32)) + (mid >> _u(32))
+
+
+def mulh(a, b):
+    h = mulhu(a, b)
+    h = h - jnp.where(_i(a) < 0, _u(b), _u(0))
+    h = h - jnp.where(_i(b) < 0, _u(a), _u(0))
+    return h
+
+
+def mulhsu(a, b):
+    h = mulhu(a, b)
+    return h - jnp.where(_i(a) < 0, _u(b), _u(0))
+
+
+def divs(a, b):
+    """Truncating signed division, RISC-V semantics."""
+    az, bz = _i(a), _i(b)
+    bzero = bz == 0
+    ovf = (az == INT_MIN) & (bz == -1)
+    ua, na = _abs_u(a)
+    ub, nb = _abs_u(b)
+    q = ua // jnp.where(bzero, _u(1), ub)
+    neg = na ^ nb
+    qs = jnp.where(neg, (~q) + _u(1), q)
+    return jnp.where(bzero, _u(0xFFFFFFFFFFFFFFFF),
+                     jnp.where(ovf, _u(1 << 63), qs))
+
+
+def rems(a, b):
+    az, bz = _i(a), _i(b)
+    bzero = bz == 0
+    ovf = (az == INT_MIN) & (bz == -1)
+    ua, na = _abs_u(a)
+    ub, _ = _abs_u(b)
+    r = ua % jnp.where(bzero, _u(1), ub)
+    rs = jnp.where(na, (~r) + _u(1), r)
+    return jnp.where(bzero, _u(a), jnp.where(ovf, _u(0), rs))
+
+
+def divu(a, b):
+    bzero = _u(b) == 0
+    return jnp.where(bzero, _u(0xFFFFFFFFFFFFFFFF),
+                     _u(a) // jnp.where(bzero, _u(1), _u(b)))
+
+
+def remu(a, b):
+    bzero = _u(b) == 0
+    return jnp.where(bzero, _u(a), _u(a) % jnp.where(bzero, _u(1), _u(b)))
+
+
+# ---------------------------------------------------------------------------
+# memory access through TLB + two-stage walk
+# ---------------------------------------------------------------------------
+
+def translate_cached(state, va, acc, force_virt=False, hlvx=False):
+    """TLB-first translation; walk + insert on miss. Returns (pa, XResult,
+    walked)."""
+    virt_eff = state["virt"] | jnp.asarray(force_virt, bool)
+    hit, pa_tlb, perm_ok = TLB.lookup(state["tlb"], va, virt_eff, _u(acc))
+    use_tlb = hit & perm_ok & ~jnp.asarray(hlvx, bool)
+    xr = X.translate(state["mem"], state["csrs"], state["priv"],
+                     state["virt"], va, acc, force_virt=force_virt,
+                     hlvx=hlvx)
+    pa = jnp.where(use_tlb, pa_tlb, xr.pa)
+    fault = ~use_tlb & xr.fault
+    xr = xr._replace(pa=pa, fault=fault)
+    return xr, ~use_tlb
+
+
+def tlb_fill(state, va, xr, force_virt=False):
+    """Insert composed translation on successful walk."""
+    virt_eff = state["virt"] | jnp.asarray(force_virt, bool)
+    mstatus = state["csrs"][C.R_MSTATUS]
+    vsstatus = state["csrs"][C.R_VSSTATUS]
+    sum_bit = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_SUM)) != 0,
+                        (mstatus & _u(C.MSTATUS_SUM)) != 0)
+    mxr = (mstatus & _u(C.MSTATUS_MXR)) != 0
+    perm = TLB.compose_perms(xr.leaf_pte, xr.g_leaf_pte, state["priv"],
+                             sum_bit, mxr)
+    # guest entries are inserted at 4K granularity (composed two-stage leaf);
+    # native entries keep their superpage level
+    level = jnp.where(virt_eff, jnp.zeros((), jnp.int32), xr.level)
+    new_tlb = TLB.insert(state["tlb"], va, xr.pa, level, perm, virt_eff)
+    ok = ~xr.fault
+    tlb_sel = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_tlb,
+                           state["tlb"])
+    return tlb_sel
+
+
+def mem_read(mem, pa, size_log2, unsigned):
+    """Aligned read of 1/2/4/8 bytes from word-array memory."""
+    word = mem[(_u(pa) >> _u(3)).astype(jnp.int32) % mem.shape[0]]
+    off = (_u(pa) & _u(7)) << _u(3)           # bit offset
+    v = word >> off
+    nbits = _u(8) << _u(size_log2)
+    mask = jnp.where(nbits >= _u(64), ~_u(0), (_u(1) << nbits) - _u(1))
+    v = v & mask
+    shift = _u(64) - nbits                    # dynamic sign extension
+    sv = _u(_i(v << shift) >> shift.astype(I64))
+    return jnp.where(unsigned, v, sv)
+
+
+def mem_write(mem, pa, val, size_log2):
+    idx = (_u(pa) >> _u(3)).astype(jnp.int32) % mem.shape[0]
+    word = mem[idx]
+    off = (_u(pa) & _u(7)) << _u(3)
+    nbits = _u(8) << _u(size_log2)
+    mask = jnp.where(nbits >= 64, ~_u(0), (_u(1) << nbits) - _u(1))
+    newword = (word & ~(mask << off)) | ((_u(val) & mask) << off)
+    return mem.at[idx].set(newword)
+
+
+# MMIO
+MMIO_CONSOLE = 0x10000000
+MMIO_DONE = 0x10000008
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+def execute(state, instr):
+    """One instruction. Returns (new_state, Fault, retired: bool)."""
+    s = state
+    csrs = s["csrs"]
+    regs = s["regs"]
+    priv = s["priv"]
+    virt = s["virt"]
+    pc = s["pc"]
+
+    op = instr & _u(0x7F)
+    rd = ((instr >> _u(7)) & _u(31)).astype(jnp.int32)
+    f3 = (instr >> _u(12)) & _u(7)
+    rs1 = ((instr >> _u(15)) & _u(31)).astype(jnp.int32)
+    rs2i = ((instr >> _u(20)) & _u(31)).astype(jnp.int32)
+    f7 = (instr >> _u(25)) & _u(0x7F)
+    rv1 = regs[rs1]
+    rv2 = regs[rs2i]
+
+    imm_i = sext(instr >> _u(20), 12)
+    imm_s = sext(((instr >> _u(20)) & ~_u(0x1F)) | ((instr >> _u(7)) & _u(0x1F)), 12)
+    imm_b = sext((((instr >> _u(31)) & _u(1)) << _u(12)) |
+                 (((instr >> _u(7)) & _u(1)) << _u(11)) |
+                 (((instr >> _u(25)) & _u(0x3F)) << _u(5)) |
+                 (((instr >> _u(8)) & _u(0xF)) << _u(1)), 13)
+    imm_u = sext(instr & _u(0xFFFFF000), 32)
+    imm_j = sext((((instr >> _u(31)) & _u(1)) << _u(20)) |
+                 (((instr >> _u(12)) & _u(0xFF)) << _u(12)) |
+                 (((instr >> _u(20)) & _u(1)) << _u(11)) |
+                 (((instr >> _u(21)) & _u(0x3FF)) << _u(1)), 21)
+
+    pc4 = pc + _u(4)
+    new_pc = pc4
+    wb = _u(0)           # writeback value
+    do_wb = jnp.zeros((), bool)
+    fault = no_fault()
+    new_mem = s["mem"]
+    new_csrs = csrs
+    new_tlb = s["tlb"]
+    new_priv = priv
+    new_virt = virt
+    new_halt = jnp.zeros((), bool)
+    console = s["console"]
+    done = s["done"]
+    exit_code = s["exit_code"]
+
+    # ---------------- ALU ---------------------------------------------------
+    is_op = op == _u(0x33)
+    is_opi = op == _u(0x13)
+    is_op32 = op == _u(0x3B)
+    is_opi32 = op == _u(0x1B)
+    alu_b = jnp.where(is_op | is_op32, rv2, imm_i)
+    m_ext = (is_op | is_op32) & (f7 == _u(1))
+
+    sh6 = alu_b & _u(0x3F)
+    sh5 = alu_b & _u(0x1F)
+    srl = rv1 >> sh6
+    sra = _u(_i(rv1) >> sh6.astype(I64))
+    sll = rv1 << sh6
+    addv = rv1 + alu_b
+    subv = rv1 - alu_b
+    sltv = _u(_i(rv1) < _i(alu_b))
+    sltuv = _u(rv1 < alu_b)
+    xorv = rv1 ^ alu_b
+    orv = rv1 | alu_b
+    andv = rv1 & alu_b
+    arith_sub = (is_op & (f7 == _u(0x20)))
+    sr_arith = f7 == _u(0x20)
+    r64 = jnp.where(f3 == 0, jnp.where(arith_sub, subv, addv),
+          jnp.where(f3 == 1, sll,
+          jnp.where(f3 == 2, sltv,
+          jnp.where(f3 == 3, sltuv,
+          jnp.where(f3 == 4, xorv,
+          jnp.where(f3 == 5, jnp.where(sr_arith, sra, srl),
+          jnp.where(f3 == 6, orv, andv)))))))
+    # M extension 64
+    mulv = rv1 * alu_b
+    m64 = jnp.where(f3 == 0, mulv,
+          jnp.where(f3 == 1, mulh(rv1, alu_b),
+          jnp.where(f3 == 2, mulhsu(rv1, alu_b),
+          jnp.where(f3 == 3, mulhu(rv1, alu_b),
+          jnp.where(f3 == 4, divs(rv1, alu_b),
+          jnp.where(f3 == 5, divu(rv1, alu_b),
+          jnp.where(f3 == 6, rems(rv1, alu_b), remu(rv1, alu_b))))))))
+    r64 = jnp.where(m_ext & is_op, m64, r64)
+    # 32-bit W forms
+    a32 = sext(rv1, 32)
+    b32 = sext(alu_b, 32)
+    add32 = sext(a32 + b32, 32)
+    sub32 = sext(a32 - b32, 32)
+    sll32 = sext(a32 << sh5, 32)
+    srl32 = sext((a32 & _u(0xFFFFFFFF)) >> sh5, 32)
+    sra32 = sext(_u(_i(sext(rv1, 32)) >> sh5.astype(I64)), 32)
+    mul32 = sext(a32 * b32, 32)
+    div32 = sext(divs(a32, b32), 64)
+    div32 = sext(divs(sext(rv1, 32), sext(alu_b, 32)), 64)
+    divu32 = jnp.where((alu_b & _u(0xFFFFFFFF)) == 0, ~_u(0),
+                       sext((rv1 & _u(0xFFFFFFFF)) //
+                            jnp.maximum(alu_b & _u(0xFFFFFFFF), _u(1)), 32))
+    rem32 = sext(rems(sext(rv1, 32), sext(alu_b, 32)), 64)
+    remu32 = jnp.where((alu_b & _u(0xFFFFFFFF)) == 0, sext(rv1, 32),
+                       sext((rv1 & _u(0xFFFFFFFF)) %
+                            jnp.maximum(alu_b & _u(0xFFFFFFFF), _u(1)), 32))
+    r32 = jnp.where(f3 == 0, jnp.where(is_op32 & (f7 == _u(0x20)), sub32,
+                                       add32),
+          jnp.where(f3 == 1, sll32,
+          jnp.where(f3 == 5, jnp.where(sr_arith, sra32, srl32), add32)))
+    m32 = jnp.where(f3 == 0, mul32,
+          jnp.where(f3 == 4, div32,
+          jnp.where(f3 == 5, divu32,
+          jnp.where(f3 == 6, rem32, remu32))))
+    r32 = jnp.where(m_ext & is_op32, m32, r32)
+
+    alu_hit = is_op | is_opi | is_op32 | is_opi32
+    wb = jnp.where(is_op | is_opi, r64, jnp.where(is_op32 | is_opi32, r32,
+                                                  wb))
+    do_wb = do_wb | alu_hit
+
+    # ---------------- LUI / AUIPC / JAL / JALR / branches -------------------
+    is_lui = op == _u(0x37)
+    is_auipc = op == _u(0x17)
+    is_jal = op == _u(0x6F)
+    is_jalr = op == _u(0x67)
+    wb = jnp.where(is_lui, imm_u, wb)
+    wb = jnp.where(is_auipc, pc + imm_u, wb)
+    wb = jnp.where(is_jal | is_jalr, pc4, wb)
+    do_wb = do_wb | is_lui | is_auipc | is_jal | is_jalr
+    new_pc = jnp.where(is_jal, pc + imm_j, new_pc)
+    new_pc = jnp.where(is_jalr, (rv1 + imm_i) & ~_u(1), new_pc)
+
+    is_br = op == _u(0x63)
+    beq = rv1 == rv2
+    blt = _i(rv1) < _i(rv2)
+    bltu = rv1 < rv2
+    brt = jnp.where(f3 == 0, beq,
+          jnp.where(f3 == 1, ~beq,
+          jnp.where(f3 == 4, blt,
+          jnp.where(f3 == 5, ~blt,
+          jnp.where(f3 == 6, bltu, ~bltu)))))
+    new_pc = jnp.where(is_br & brt, pc + imm_b, new_pc)
+
+    # ---------------- loads / stores (incl. hlv/hsv) -------------------------
+    is_load = op == _u(0x03)
+    is_store = op == _u(0x23)
+    is_sys = op == _u(0x73)
+    is_hx = is_sys & (f3 == _u(4))
+    is_hlv = is_hx & ((f7 & _u(1)) == 0)
+    is_hsv = is_hx & ((f7 & _u(1)) == 1)
+    # hlv/hsv legality: M or HS (or U with hstatus.HU); VS/VU → virtual inst
+    hu = (csrs[C.R_HSTATUS] & _u(C.HSTATUS_HU)) != 0
+    hx_legal = (priv == 3) | ((priv == 1) & ~virt) | ((priv == 0) & ~virt & hu)
+    hx_vinst = is_hx & virt
+    hx_illegal = is_hx & ~virt & ~hx_legal
+
+    any_load = is_load | is_hlv
+    any_store = is_store | is_hsv
+    addr = jnp.where(is_hx, rv1, rv1 + jnp.where(is_store, imm_s, imm_i))
+    size = jnp.where(is_hx, ((f7 >> _u(1)) & _u(3)).astype(jnp.int32),
+                     (f3 & _u(3)).astype(jnp.int32))
+    uns = jnp.where(is_hx, (rs2i & 1) == 1, (f3 & _u(4)) != 0)
+    hlvx = is_hlv & (rs2i == 3)
+    force_virt = is_hx
+
+    # alignment
+    sz_b = _u(1) << _u(size)
+    misaligned = (addr & (sz_b - _u(1))) != 0
+    macc = jnp.where(any_store, X.ACC_W, X.ACC_R)
+    xr, walked = translate_cached(
+        {**s, "csrs": csrs}, addr, macc, force_virt=force_virt, hlvx=hlvx)
+    # MMIO check (physical)
+    is_console = xr.pa == _u(MMIO_CONSOLE)
+    is_done_io = xr.pa == _u(MMIO_DONE)
+    is_mmio = is_console | is_done_io
+
+    ld_val = mem_read(s["mem"], xr.pa, size, uns)
+    st_mem = mem_write(s["mem"], xr.pa, rv2, size)
+
+    mem_op = (any_load | any_store) & ~hx_vinst & ~hx_illegal
+    mem_fault_align = mem_op & misaligned
+    mem_fault_page = mem_op & ~misaligned & xr.fault
+
+    # tinst for guest page faults (paper tinst_tests): pseudoinstruction for
+    # implicit PTE-walk faults, rs1-cleared transform for explicit accesses
+    is_gpf = (xr.cause == _u(C.EXC_LGUEST_PAGE_FAULT)) | \
+             (xr.cause == _u(C.EXC_SGUEST_PAGE_FAULT))
+    pseudo = jnp.where(any_store, _u(0x2020), _u(0x2000))
+    transform = instr & ~_u(0xF8000)      # clear rs1 field
+    tinst = jnp.where(xr.implicit, pseudo, transform)
+    tinst = jnp.where(is_gpf, tinst, _u(0))
+
+    f_mem = mk_fault(
+        mem_fault_page, 0, 0, 0, False, 0)._replace(
+        cause=xr.cause, tval=xr.tval, tval2=xr.tval2,
+        gva=xr.gva | (force_virt & xr.fault), tinst=tinst)
+    align_cause = jnp.where(any_store, C.EXC_SADDR_MISALIGNED,
+                            C.EXC_LADDR_MISALIGNED)
+    f_align = Fault(mem_fault_align, _u(align_cause), _u(addr), _u(0),
+                    jnp.asarray(virt | force_virt, bool), _u(0))
+    fault = merge_fault(merge_fault(f_align, f_mem), fault)
+
+    mem_ok = mem_op & ~misaligned & ~xr.fault
+    wb = jnp.where(any_load & mem_ok, ld_val, wb)
+    do_wb = do_wb | (any_load & mem_ok)
+    new_mem = jnp.where(any_store & mem_ok & ~is_mmio, st_mem, new_mem)
+    console = jnp.where(any_store & mem_ok & is_console, console + 1,
+                        console)
+    done = done | (any_store & mem_ok & is_done_io)
+    exit_code = jnp.where(any_store & mem_ok & is_done_io, rv2, exit_code)
+    new_tlb = jax.tree.map(
+        lambda n, o: jnp.where(mem_ok & walked, n, o),
+        tlb_fill(s, addr, xr, force_virt=force_virt), new_tlb)
+    fault = merge_fault(fault, mk_fault(hx_vinst, C.EXC_VIRTUAL_INSTRUCTION,
+                                        instr))
+    fault = merge_fault(fault, mk_fault(hx_illegal, C.EXC_ILLEGAL, instr))
+
+    # ---------------- SYSTEM: CSR ops ---------------------------------------
+    is_csr = is_sys & (f3 != _u(0)) & (f3 != _u(4))
+    csr_addr = (instr >> _u(20)).astype(jnp.int32) & 0xFFF
+    imm_z = _u(rs1)
+    csr_wdata = jnp.where(f3 >= _u(5), imm_z, rv1)
+    old, r_ok, r_vinst = C.csr_read(csrs, csr_addr, priv, virt)
+    wval = jnp.where((f3 & _u(3)) == 1, csr_wdata,
+           jnp.where((f3 & _u(3)) == 2, old | csr_wdata, old & ~csr_wdata))
+    csr_do_write = ((f3 & _u(3)) == 1) | (rs1 != 0)
+    csrs_w, w_ok, w_vinst = C.csr_write(csrs, csr_addr, wval, priv, virt)
+    csr_ok = r_ok & jnp.where(csr_do_write, w_ok, True)
+    csr_vinst = r_vinst | (csr_do_write & w_vinst)
+    new_csrs = jnp.where(is_csr & csr_ok & csr_do_write, csrs_w, new_csrs)
+    wb = jnp.where(is_csr & csr_ok, old, wb)
+    do_wb = do_wb | (is_csr & csr_ok)
+    fault = merge_fault(fault, mk_fault(is_csr & csr_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+    fault = merge_fault(fault, mk_fault(is_csr & ~csr_ok & ~csr_vinst,
+                                        C.EXC_ILLEGAL, instr))
+    # satp/vsatp/hgatp writes invalidate cached translations
+    atp_write = is_csr & csr_ok & csr_do_write & (
+        (csr_addr == 0x180) | (csr_addr == 0x280) | (csr_addr == 0x680))
+    new_tlb = jax.tree.map(
+        lambda n, o: jnp.where(atp_write, n, o),
+        TLB.flush_where(s["tlb"], jnp.ones((), bool), jnp.ones((), bool)),
+        new_tlb)
+
+    # ---------------- SYSTEM: priv ops --------------------------------------
+    f7s = f7
+    sys0 = is_sys & (f3 == _u(0))
+    is_ecall = sys0 & (instr == _u(0x00000073))
+    is_ebreak = sys0 & (instr == _u(0x00100073))
+    is_sret = sys0 & (instr == _u(0x10200073))
+    is_mret = sys0 & (instr == _u(0x30200073))
+    is_wfi = sys0 & (instr == _u(0x10500073))
+    is_sfence = sys0 & (f7s == _u(0x09))
+    is_hfence_v = sys0 & (f7s == _u(0x11))   # hfence.vvma
+    is_hfence_g = sys0 & (f7s == _u(0x31))   # hfence.gvma
+
+    mstatus = csrs[C.R_MSTATUS]
+    hstatus = csrs[C.R_HSTATUS]
+
+    ecall_cause = jnp.where(priv == 3, C.EXC_ECALL_M,
+                  jnp.where(priv == 0, C.EXC_ECALL_U,
+                            jnp.where(virt, C.EXC_ECALL_VS, C.EXC_ECALL_S)))
+    fault = merge_fault(fault, mk_fault(is_ecall, ecall_cause))
+    fault = merge_fault(fault, mk_fault(is_ebreak, C.EXC_BREAK, pc))
+
+    # WFI: TW/VTW trapping (paper wfi_exception_tests)
+    tw = (mstatus & _u(C.MSTATUS_TW)) != 0
+    vtw = (hstatus & _u(C.HSTATUS_VTW)) != 0
+    wfi_illegal = is_wfi & ((tw & (priv < 3)) | (priv == 0) & ~virt)
+    wfi_vinst = is_wfi & ~wfi_illegal & virt & (vtw | (priv == 0))
+    wfi_ok = is_wfi & ~wfi_illegal & ~wfi_vinst
+    pend_any = (csrs[C.R_MIP] & csrs[C.R_MIE]) != 0
+    new_halt = new_halt | (wfi_ok & ~pend_any)
+    fault = merge_fault(fault, mk_fault(wfi_illegal, C.EXC_ILLEGAL, instr))
+    fault = merge_fault(fault, mk_fault(wfi_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+
+    # SRET
+    tsr = (mstatus & _u(C.MSTATUS_TSR)) != 0
+    vtsr = (hstatus & _u(C.HSTATUS_VTSR)) != 0
+    sret_illegal = is_sret & ((priv == 0) | (tsr & (priv == 1) & ~virt))
+    sret_vinst = is_sret & ~sret_illegal & virt & (vtsr | (priv == 0))
+    sret_ok = is_sret & ~sret_illegal & ~sret_vinst
+    fault = merge_fault(fault, mk_fault(sret_illegal, C.EXC_ILLEGAL, instr))
+    fault = merge_fault(fault, mk_fault(sret_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+    # sret from HS: V ← hstatus.SPV, priv ← sstatus.SPP
+    spp = ((mstatus & _u(C.MSTATUS_SPP)) != 0).astype(jnp.int32)
+    spie = (mstatus & _u(C.MSTATUS_SPIE)) != 0
+    mst_sret = mstatus
+    mst_sret = jnp.where(spie, mst_sret | _u(C.MSTATUS_SIE),
+                         mst_sret & ~_u(C.MSTATUS_SIE))
+    mst_sret = (mst_sret | _u(C.MSTATUS_SPIE)) & ~_u(C.MSTATUS_SPP)
+    spv = (hstatus & _u(C.HSTATUS_SPV)) != 0
+    hst_sret = hstatus & ~_u(C.HSTATUS_SPV)
+    # sret from VS (virt): uses vsstatus
+    vsstatus = csrs[C.R_VSSTATUS]
+    vspp = ((vsstatus & _u(C.MSTATUS_SPP)) != 0).astype(jnp.int32)
+    vspie = (vsstatus & _u(C.MSTATUS_SPIE)) != 0
+    vst_sret = vsstatus
+    vst_sret = jnp.where(vspie, vst_sret | _u(C.MSTATUS_SIE),
+                         vst_sret & ~_u(C.MSTATUS_SIE))
+    vst_sret = (vst_sret | _u(C.MSTATUS_SPIE)) & ~_u(C.MSTATUS_SPP)
+    csrs_sret_hs = csrs.at[C.R_MSTATUS].set(mst_sret).at[C.R_HSTATUS].set(
+        hst_sret)
+    csrs_sret_vs = csrs.at[C.R_VSSTATUS].set(vst_sret)
+    new_csrs = jnp.where(sret_ok & ~virt, csrs_sret_hs,
+                         jnp.where(sret_ok & virt, csrs_sret_vs, new_csrs))
+    new_priv = jnp.where(sret_ok, jnp.where(virt, vspp, spp), new_priv)
+    new_virt = jnp.where(sret_ok, jnp.where(virt, virt, spv), new_virt)
+    new_pc = jnp.where(sret_ok, jnp.where(virt, csrs[C.R_VSEPC],
+                                          csrs[C.R_SEPC]), new_pc)
+
+    # MRET
+    mret_illegal = is_mret & (priv != 3)
+    mret_ok = is_mret & ~mret_illegal
+    fault = merge_fault(fault, mk_fault(mret_illegal, C.EXC_ILLEGAL, instr))
+    mpp = ((mstatus & _u(C.MSTATUS_MPP)) >> _u(11)).astype(jnp.int32)
+    mpie = (mstatus & _u(C.MSTATUS_MPIE)) != 0
+    mpv = (mstatus & _u(C.MSTATUS_MPV)) != 0
+    mst_mret = mstatus
+    mst_mret = jnp.where(mpie, mst_mret | _u(C.MSTATUS_MIE),
+                         mst_mret & ~_u(C.MSTATUS_MIE))
+    mst_mret = (mst_mret | _u(C.MSTATUS_MPIE)) & ~_u(C.MSTATUS_MPP) & \
+        ~_u(C.MSTATUS_MPV)
+    new_csrs = jnp.where(mret_ok, csrs.at[C.R_MSTATUS].set(mst_mret),
+                         new_csrs)
+    new_priv = jnp.where(mret_ok, mpp, new_priv)
+    new_virt = jnp.where(mret_ok, (mpp != 3) & mpv, new_virt)
+    new_pc = jnp.where(mret_ok, csrs[C.R_MEPC], new_pc)
+
+    # fences (paper hfence_tests: hfence touches only guest TLB entries).
+    # sfence.vma from VS flushes the guest's own (guest-tagged) entries;
+    # hfence.{vvma,gvma} from VS raises virtual-instruction; from U illegal.
+    is_hf = is_hfence_v | is_hfence_g
+    hf_vinst = is_hf & virt
+    hf_illegal = is_hf & ~virt & (priv == 0)
+    sf_vinst = is_sfence & virt & (priv == 0)          # VU
+    sf_illegal = is_sfence & ~virt & (priv == 0)       # native U
+    fault = merge_fault(fault, mk_fault(hf_vinst | sf_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+    fault = merge_fault(fault, mk_fault(hf_illegal | sf_illegal,
+                                        C.EXC_ILLEGAL, instr))
+    do_hf = is_hf & ~virt & (priv >= 1)
+    do_sf_native = is_sfence & ~virt & (priv >= 1)
+    do_sf_guest = is_sfence & virt & (priv >= 1)       # guest flushing itself
+    new_tlb = jax.tree.map(
+        lambda n, o: jnp.where(do_hf | do_sf_native | do_sf_guest, n, o),
+        TLB.flush_where(s["tlb"],
+                        cond_guest=do_hf | do_sf_guest,
+                        cond_native=do_sf_native),
+        new_tlb)
+
+    # FENCE / FENCE.I: no-op
+    # (opcode 0x0F)
+
+    # ---------------- illegal opcode ----------------------------------------
+    known = (alu_hit | is_lui | is_auipc | is_jal | is_jalr | is_br |
+             is_load | is_store | is_sys | (op == _u(0x0F)))
+    fault = merge_fault(fault, mk_fault(~known, C.EXC_ILLEGAL, instr))
+
+    # ---------------- writeback & commit ------------------------------------
+    retired = ~fault.fault
+    wb_final = jnp.where(do_wb & retired & (rd != 0), wb, regs[rd])
+    new_regs = regs.at[rd].set(wb_final)
+
+    out = dict(s)
+    out["regs"] = jnp.where(retired, new_regs, regs)
+    out["pc"] = jnp.where(retired, new_pc, pc)
+    out["csrs"] = jnp.where(retired, new_csrs, csrs)
+    out["mem"] = jnp.where(retired, new_mem, s["mem"])
+    out["tlb"] = jax.tree.map(lambda n, o: jnp.where(retired, n, o),
+                              new_tlb, s["tlb"])
+    out["priv"] = jnp.where(retired, new_priv, priv)
+    out["virt"] = jnp.where(retired, new_virt, virt)
+    out["halted"] = jnp.where(retired, new_halt, s["halted"])
+    out["console"] = console
+    out["done"] = done
+    out["exit_code"] = exit_code
+    return out, fault, retired

@@ -1,0 +1,201 @@
+"""Batched hart state machine — gem5's tick loop, vectorized.
+
+``step`` = CheckInterrupts → (halted? idle) → fetch (translated) → execute →
+(fault? RiscvFault::invoke analogue). All branchless; ``run`` scans ticks;
+``batched_run`` vmaps over a hart batch (the TPU-native reformulation of
+gem5's event loop — DESIGN.md §2a).
+
+Counters (per hart) mirror the paper's Figures:
+  instret              — Fig 5 (executed instructions w/ and w/o VM)
+  exc_by_level[3]      — Figs 6/7 (exceptions handled at M / HS / VS)
+  int_by_level[3]      — interrupts handled per level
+  pagefaults           — page-fault subset of exceptions
+  walks                — page-table walks performed (TLB misses)
+  ticks                — Fig 4 (simulation time proxy; deterministic)
+
+64-bit integer state requires x64; call sites must run under
+``with jax.experimental.enable_x64():`` — ``run``/``batched_run`` do this
+internally around trace+execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hext import csr as C
+from repro.core.hext import isa
+from repro.core.hext import tlb as TLB
+from repro.core.hext import translate as X
+from repro.core.hext import trap as TR
+
+U64 = jnp.uint64
+
+
+def _u(x):
+    return jnp.asarray(x, U64)
+
+
+DEFAULT_MEM_WORDS = 1 << 15          # 256 KiB per hart
+
+
+def make_state(mem_words: int = DEFAULT_MEM_WORDS) -> Dict:
+    with jax.experimental.enable_x64():
+        return _make_state(mem_words)
+
+
+def _make_state(mem_words: int) -> Dict:
+    return {
+        "pc": _u(0),
+        "regs": jnp.zeros((32,), U64),
+        "csrs": C.init_csrs(),
+        "priv": jnp.asarray(3, jnp.int32),     # boot in M
+        "virt": jnp.zeros((), bool),
+        "mem": jnp.zeros((mem_words,), U64),
+        "tlb": TLB.init_tlb(),
+        "halted": jnp.zeros((), bool),
+        "done": jnp.zeros((), bool),
+        "exit_code": _u(0),
+        "console": jnp.zeros((), jnp.int64),
+        # counters
+        "instret": jnp.zeros((), jnp.int64),
+        "instret_virt": jnp.zeros((), jnp.int64),
+        "exc_by_level": jnp.zeros((3,), jnp.int64),   # M, HS, VS
+        "int_by_level": jnp.zeros((3,), jnp.int64),
+        "pagefaults": jnp.zeros((), jnp.int64),
+        "walks": jnp.zeros((), jnp.int64),
+        "ticks": jnp.zeros((), jnp.int64),
+    }
+
+
+def load_image(state: Dict, image, base: int = 0) -> Dict:
+    """Write a uint64-word image into memory at byte address `base`."""
+    with jax.experimental.enable_x64():
+        w = base >> 3
+        mem = state["mem"].at[w:w + image.shape[0]].set(image.astype(U64))
+        return {**state, "mem": mem}
+
+
+def _sel_state(cond, a: Dict, b: Dict) -> Dict:
+    return jax.tree.map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
+def _invoke(state: Dict, f: isa.Fault, is_int, pc_override=None) -> Dict:
+    """RiscvFault::invoke(): route + update CSRs + bump counters."""
+    pc = state["pc"] if pc_override is None else pc_override
+    new_csrs, new_pc, new_priv, new_virt, handled = TR.take_trap(
+        state["csrs"], state["priv"], state["virt"], pc, f.cause, is_int,
+        f.tval, f.tval2, f.gva, f.tinst)
+    out = dict(state)
+    out["csrs"] = new_csrs
+    out["pc"] = new_pc
+    out["priv"] = new_priv
+    out["virt"] = new_virt
+    out["halted"] = jnp.zeros((), bool)
+    is_pf = ((f.cause == _u(C.EXC_IPAGE_FAULT)) |
+             (f.cause == _u(C.EXC_LPAGE_FAULT)) |
+             (f.cause == _u(C.EXC_SPAGE_FAULT)) |
+             (f.cause == _u(C.EXC_IGUEST_PAGE_FAULT)) |
+             (f.cause == _u(C.EXC_LGUEST_PAGE_FAULT)) |
+             (f.cause == _u(C.EXC_SGUEST_PAGE_FAULT)))
+    lvl = handled  # 0 M, 1 HS, 2 VS
+    key = "int_by_level" if is_int else "exc_by_level"
+    out[key] = state[key].at[lvl].add(1)
+    if not is_int:
+        out["pagefaults"] = state["pagefaults"] + is_pf.astype(jnp.int64)
+    return out
+
+
+def step(state: Dict) -> Dict:
+    s = state
+    frozen = s["done"]
+
+    # ---- 1. CheckInterrupts (paper Fig 2) ----------------------------------
+    take, cause = TR.pending_interrupt(s["csrs"], s["priv"], s["virt"])
+    f_int = isa.mk_fault(take, 0)._replace(cause=cause)
+    s_int = _invoke(s, f_int, is_int=True)
+
+    # ---- 2. fetch + execute -------------------------------------------------
+    xr, walked = isa.translate_cached(s, s["pc"], X.ACC_X)
+    fetch_fault = xr.fault
+    # fetch guest-page-fault tinst is always 0
+    f_fetch = isa.Fault(fetch_fault, xr.cause, xr.tval, xr.tval2, xr.gva,
+                        _u(0))
+    word = s["mem"][(xr.pa >> _u(3)).astype(jnp.int32) % s["mem"].shape[0]]
+    instr = jnp.where((xr.pa & _u(4)) != 0, word >> _u(32),
+                      word & _u(0xFFFFFFFF))
+    s_after_fill = dict(s)
+    s_after_fill["tlb"] = jax.tree.map(
+        lambda n, o: jnp.where(~fetch_fault & walked, n, o),
+        isa.tlb_fill(s, s["pc"], xr), s["tlb"])
+    s_after_fill["walks"] = s["walks"] + walked.astype(jnp.int64)
+
+    s_exec, f_exec, retired = isa.execute(s_after_fill, instr)
+    s_exec["instret"] = s_exec["instret"] + retired.astype(jnp.int64)
+    s_exec["instret_virt"] = s_exec["instret_virt"] + \
+        (retired & s["virt"]).astype(jnp.int64)
+
+    fault = isa.merge_fault(f_fetch, f_exec)
+    s_fault = _invoke(_sel_state(fetch_fault, s_after_fill, s_exec), fault,
+                      is_int=False)
+
+    s_run = _sel_state(fault.fault, s_fault, s_exec)
+    # halted harts only wait for interrupts
+    s_norm = _sel_state(s["halted"] & ~take, s, s_run)
+    out = _sel_state(take, s_int, s_norm)
+    out = _sel_state(frozen, s, out)
+    out["ticks"] = state["ticks"] + (~frozen).astype(jnp.int64)
+    return out
+
+
+def run(state: Dict, n_ticks: int, unroll: int = 1) -> Dict:
+    """Scan `n_ticks` steps (compiled once)."""
+    with jax.experimental.enable_x64():
+        def body(s, _):
+            return step(s), None
+        fn = jax.jit(lambda s: jax.lax.scan(body, s, None, length=n_ticks,
+                                            unroll=unroll)[0])
+        return fn(state)
+
+
+def batched_run(states: Dict, n_ticks: int) -> Dict:
+    """vmap over the hart batch — many VMs simulated in lockstep."""
+    with jax.experimental.enable_x64():
+        def body(s, _):
+            return step(s), None
+        one = lambda s: jax.lax.scan(body, s, None, length=n_ticks)[0]
+        return jax.jit(jax.vmap(one))(states)
+
+
+def run_until_done(state: Dict, max_ticks: int, chunk: int = 4096) -> Dict:
+    """Run in chunks, stopping early once all harts are done (host loop)."""
+    with jax.experimental.enable_x64():
+        def body(s, _):
+            return step(s), None
+        chunk_fn = jax.jit(lambda s: jax.lax.scan(body, s, None,
+                                                  length=chunk)[0])
+        t = 0
+        while t < max_ticks:
+            state = chunk_fn(state)
+            t += chunk
+            if bool(jnp.all(state["done"])):
+                break
+        return state
+
+
+def batched_run_until_done(states: Dict, max_ticks: int,
+                           chunk: int = 4096) -> Dict:
+    with jax.experimental.enable_x64():
+        def body(s, _):
+            return step(s), None
+        one = lambda s: jax.lax.scan(body, s, None, length=chunk)[0]
+        chunk_fn = jax.jit(jax.vmap(one))
+        t = 0
+        while t < max_ticks:
+            states = chunk_fn(states)
+            t += chunk
+            if bool(jnp.all(states["done"])):
+                break
+        return states

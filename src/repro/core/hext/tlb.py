@@ -1,0 +1,109 @@
+"""Two-stage-aware TLB (paper §3.5 challenge (3)).
+
+Each entry caches a *composed* translation (VPN → host PFN) plus the
+permission bits derived from BOTH the guest (VS-stage) leaf PTE and the host
+(G-stage) leaf PTE — the paper's observation that the guest's PFN may carry
+different permissions than the supervisor's PFN. Entries created in
+virtualization mode are tagged ``guest`` so that ``hfence.{vvma,gvma}``
+invalidates only them while ``sfence.vma`` touches only native entries.
+Megapage/gigapage leaves insert with their level so neighbours hit too.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hext import csr as C
+from repro.core.hext import translate as X
+
+U64 = jnp.uint64
+N_TLB = 16
+
+
+def _u(x):
+    return jnp.asarray(x, U64)
+
+PERM_R, PERM_W, PERM_X = 1, 2, 4
+
+
+def init_tlb():
+    return {
+        "vpn": jnp.zeros((N_TLB,), U64),
+        "ppn": jnp.zeros((N_TLB,), U64),
+        "level": jnp.zeros((N_TLB,), jnp.int32),
+        "perm": jnp.zeros((N_TLB,), jnp.int32),
+        "guest": jnp.zeros((N_TLB,), bool),
+        "valid": jnp.zeros((N_TLB,), bool),
+        "ptr": jnp.zeros((), jnp.int32),
+    }
+
+
+def _vpn_mask(level):
+    """VPN bits that must match for an entry of this level."""
+    return ~((_u(1) << (level.astype(U64) * _u(9))) - _u(1))
+
+
+def lookup(tlb, va, virt, acc):
+    """→ (hit, pa, perm_ok)."""
+    vpn = jnp.asarray(va, U64) >> _u(12)
+    lm = _vpn_mask(tlb["level"])
+    match = tlb["valid"] & (tlb["guest"] == virt) & \
+        ((vpn & lm) == (tlb["vpn"] & lm))
+    hit = jnp.any(match)
+    idx = jnp.argmax(match)
+    level = tlb["level"][idx]
+    in_page = jnp.asarray(va, U64) & ((_u(1) << (_u(12) +
+                                       level.astype(U64) * _u(9)))
+                                      - _u(1))
+    base = tlb["ppn"][idx] << _u(12)
+    base = base & ~((_u(1) << (_u(12) + level.astype(U64) *
+                                     _u(9))) - _u(1))
+    pa = base | in_page
+    want = jnp.where(acc == X.ACC_R, PERM_R,
+                     jnp.where(acc == X.ACC_W, PERM_W, PERM_X))
+    perm_ok = (tlb["perm"][idx] & want) != 0
+    return hit, pa, perm_ok
+
+
+def compose_perms(vs_pte, g_pte, priv, sum_bit, mxr):
+    """Permission bits of the composed entry — guest PTE perms AND host PTE
+    perms (paper: store guest PTE permission bits alongside the host's)."""
+    bits = jnp.zeros((), jnp.int32)
+    for acc, bit in ((X.ACC_R, PERM_R), (X.ACC_W, PERM_W), (X.ACC_X, PERM_X)):
+        a = jnp.asarray(acc, U64)
+        ok1 = X._leaf_ok(vs_pte, a, priv, sum_bit, mxr, jnp.zeros((), bool))
+        ok2 = X._leaf_ok(g_pte, a, jnp.zeros((), jnp.int32),
+                         jnp.zeros((), bool), mxr, jnp.ones((), bool))
+        bits = bits | jnp.where(ok1 & ok2, bit, 0)
+    return bits
+
+
+def insert(tlb, va, pa, level, perm, virt):
+    i = tlb["ptr"] % N_TLB
+    t = dict(tlb)
+    t["vpn"] = tlb["vpn"].at[i].set(jnp.asarray(va, U64) >> _u(12))
+    t["ppn"] = tlb["ppn"].at[i].set(jnp.asarray(pa, U64) >> _u(12))
+    t["level"] = tlb["level"].at[i].set(level)
+    t["perm"] = tlb["perm"].at[i].set(perm)
+    t["guest"] = tlb["guest"].at[i].set(virt)
+    t["valid"] = tlb["valid"].at[i].set(True)
+    t["ptr"] = tlb["ptr"] + 1
+    return t
+
+
+def flush(tlb, guest_only=False, native_only=False):
+    keep = jnp.zeros((N_TLB,), bool)
+    if guest_only:
+        keep = ~tlb["guest"]       # hfence: drop guest entries only
+    if native_only:
+        keep = tlb["guest"]        # sfence: drop native entries only
+    t = dict(tlb)
+    t["valid"] = tlb["valid"] & keep
+    return t
+
+
+def flush_where(tlb, cond_guest, cond_native):
+    """Traced flush: cond_guest/cond_native are traced bools."""
+    drop = (tlb["guest"] & cond_guest) | (~tlb["guest"] & cond_native)
+    t = dict(tlb)
+    t["valid"] = tlb["valid"] & ~drop
+    return t

@@ -1,0 +1,246 @@
+"""Sv39 / Sv39x4 one- and two-stage address translation (paper §3.3).
+
+The VS-stage (``vsatp``) translates guest-virtual → guest-physical; every
+page-table access of that walk, and the final guest-physical address, is
+itself translated by the G-stage (``hgatp``, Sv39x4: root widened by 2 bits)
+— guest PA → host PA. Faults carry (cause, tval=VA, tval2=GPA>>2, gva).
+
+Everything is branchless (masked 3-level unrolled walks) so it traces into a
+fixed graph, vmaps over harts, and mirrors the Pallas `kernels/pagewalk`
+implementation (same math; kernel is the VMEM-tiled version).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.hext import csr as C
+
+U64 = jnp.uint64
+
+# PTE bits
+PTE_V = 1 << 0
+PTE_R = 1 << 1
+PTE_W = 1 << 2
+PTE_X = 1 << 3
+PTE_U = 1 << 4
+PTE_A = 1 << 6
+PTE_D = 1 << 7
+
+ACC_R, ACC_W, ACC_X = 0, 1, 2
+
+PAGE_SHIFT = 12
+LEVELS = 3
+
+
+class XResult(NamedTuple):
+    pa: jnp.ndarray          # host-physical address (uint64)
+    fault: jnp.ndarray       # bool
+    cause: jnp.ndarray       # uint64 exception cause
+    tval: jnp.ndarray        # faulting VA (uint64)
+    tval2: jnp.ndarray       # faulting GPA >> 2 (uint64); 0 if none
+    gva: jnp.ndarray         # bool: tval is a guest virtual address
+    implicit: jnp.ndarray    # bool: G-stage fault on an *implicit* PTE fetch
+    leaf_pte: jnp.ndarray    # stage-1 leaf PTE (or all-perm pseudo-PTE)
+    g_leaf_pte: jnp.ndarray  # G-stage leaf PTE (or all-perm pseudo-PTE)
+    level: jnp.ndarray       # stage-1 leaf level (0=4K,1=2M,2=1G)
+
+
+# pseudo-PTE carrying every permission (used for bare/no-paging stages)
+ALL_PERM_PTE = PTE_V | PTE_R | PTE_W | PTE_X | PTE_U | PTE_A | PTE_D
+
+
+def _u(x):
+    return jnp.asarray(x, U64)
+
+
+def _read64(mem, pa):
+    return mem[(pa >> _u(3)).astype(jnp.int32) % mem.shape[0]]
+
+
+def _pf_cause(acc, guest):
+    """Page-fault cause for access type; guest=True → guest-page-fault."""
+    norm = jnp.where(acc == ACC_R, C.EXC_LPAGE_FAULT,
+                     jnp.where(acc == ACC_W, C.EXC_SPAGE_FAULT,
+                               C.EXC_IPAGE_FAULT))
+    g = jnp.where(acc == ACC_R, C.EXC_LGUEST_PAGE_FAULT,
+                  jnp.where(acc == ACC_W, C.EXC_SGUEST_PAGE_FAULT,
+                            C.EXC_IGUEST_PAGE_FAULT))
+    return _u(jnp.where(guest, g, norm))
+
+
+def _leaf_ok(pte, acc, priv, sum_bit, mxr, require_u):
+    """Permission check on a leaf PTE."""
+    r = (pte & _u(PTE_R)) != 0
+    w = (pte & _u(PTE_W)) != 0
+    x = (pte & _u(PTE_X)) != 0
+    u = (pte & _u(PTE_U)) != 0
+    a = (pte & _u(PTE_A)) != 0
+    d = (pte & _u(PTE_D)) != 0
+    r_eff = r | (mxr & x)
+    perm = jnp.where(acc == ACC_R, r_eff, jnp.where(acc == ACC_W, w & r, x))
+    # U-bit discipline: U-mode needs U=1; S-mode needs U=0 unless SUM (loads/
+    # stores only). G-stage walks pass require_u=True (guest accesses are "U").
+    upriv = priv == 0
+    u_ok = jnp.where(require_u, u,
+                     jnp.where(upriv, u,
+                               (~u) | (sum_bit & (acc != ACC_X))))
+    ad_ok = a & jnp.where(acc == ACC_W, d, True)
+    return perm & u_ok & ad_ok
+
+
+def _walk(mem, root_pa, vpn2_bits, va, acc, priv, sum_bit, mxr, require_u,
+          guest, pte_xlate=None, cause_acc=None):
+    """Generic 3-level Sv39(x4) walk.
+
+    vpn2_bits: 9 (Sv39) or 11 (Sv39x4). pte_xlate: optional fn(gpa) →
+    XResult used to G-translate each PTE address (the nesting that makes
+    two-stage translation expensive — paper Fig 3). cause_acc: access type
+    used for fault *causes* (G-stage faults during implicit PTE fetches
+    report the original access type per the spec)."""
+    cause_acc = acc if cause_acc is None else cause_acc
+    va = _u(va)
+    base = _u(root_pa)
+    done = jnp.zeros((), bool)
+    fault = jnp.zeros((), bool)
+    f_cause = _u(0)
+    f_tval2 = _u(0)
+    f_implicit = jnp.zeros((), bool)
+    pa = _u(0)
+    leaf_pte = _u(0)
+    leaf_level = jnp.zeros((), jnp.int32)
+    for level in (2, 1, 0):
+        shift = PAGE_SHIFT + 9 * level
+        nbits = vpn2_bits if level == 2 else 9
+        vpn = (va >> _u(shift)) & _u((1 << nbits) - 1)
+        pte_addr = base + (vpn << _u(3))
+        g_tval2 = _u(0)
+        if pte_xlate is not None:
+            xr = pte_xlate(pte_addr, _u(ACC_R))
+            pte_pa = xr.pa
+            g_fault = xr.fault
+            g_cause = xr.cause
+            g_tval2 = xr.tval2
+        else:
+            pte_pa, g_fault, g_cause = pte_addr, jnp.zeros((), bool), _u(0)
+        pte = _read64(mem, pte_pa)
+        valid = (pte & _u(PTE_V)) != 0
+        is_leaf = (pte & _u(PTE_R | PTE_X)) != 0
+        ppn = (pte >> _u(10)) & _u((1 << 44) - 1)
+        # superpage alignment: low ppn bits must be zero at level>0
+        align_ok = (ppn & _u((1 << (9 * level)) - 1)) == 0 if level else \
+            jnp.ones((), bool)
+        perm_ok = _leaf_ok(pte, acc, priv, sum_bit, mxr, require_u)
+        this_fault_pte = ~valid
+        leaf_fault = is_leaf & (~align_ok | ~perm_ok)
+        level_fault = jnp.where(g_fault, True, this_fault_pte | leaf_fault)
+        level_cause = jnp.where(g_fault, g_cause, _pf_cause(cause_acc, guest))
+        # leaf PA: ppn high bits + VA low bits per level
+        mask_low = _u((1 << shift) - 1)
+        leaf_pa = ((ppn << _u(PAGE_SHIFT)) & ~mask_low) | (va & mask_low)
+        new_fault = ~done & level_fault
+        fault = fault | new_fault
+        f_cause = jnp.where(new_fault, level_cause, f_cause)
+        f_tval2 = jnp.where(new_fault & g_fault, g_tval2, f_tval2)
+        f_implicit = f_implicit | (new_fault & g_fault)
+        take_leaf = ~done & ~level_fault & is_leaf
+        pa = jnp.where(take_leaf, leaf_pa, pa)
+        leaf_pte = jnp.where(take_leaf, pte, leaf_pte)
+        leaf_level = jnp.where(take_leaf, level, leaf_level)
+        done = done | new_fault | take_leaf
+        # walk down: next base
+        base = jnp.where(done, base, ppn << _u(PAGE_SHIFT))
+    # ran out of levels without leaf → page fault
+    miss = ~done
+    fault = fault | miss
+    f_cause = jnp.where(miss, _pf_cause(cause_acc, guest), f_cause)
+    return pa, fault, f_cause, f_tval2, f_implicit, leaf_pte, leaf_level
+
+
+def g_translate(mem, hgatp, gpa, acc, mxr, cause_acc=None):
+    """G-stage only: guest-physical → host-physical (Sv39x4).
+
+    Guest accesses are treated as user-level (PTE.U required). cause_acc:
+    original access type for fault causes (implicit PTE fetches)."""
+    mode = (hgatp >> _u(C.ATP_MODE_SHIFT)) & _u(0xF)
+    root = (hgatp & _u(C.ATP_PPN_MASK)) << _u(PAGE_SHIFT)
+    gpa = _u(gpa)
+    pa, fault, cause, _, _imp, lp, lvl = _walk(
+        mem, root, 11, gpa, acc, jnp.zeros((), jnp.int32), jnp.zeros((), bool),
+        mxr, jnp.ones((), bool), jnp.ones((), bool), cause_acc=cause_acc)
+    bare = mode == 0
+    pa = jnp.where(bare, gpa, pa)
+    fault = jnp.where(bare, False, fault)
+    cause = jnp.where(bare, _u(0), cause)
+    lp = jnp.where(bare, _u(ALL_PERM_PTE), lp)
+    return XResult(pa=pa, fault=fault, cause=cause, tval=gpa,
+                   tval2=gpa >> _u(2), gva=jnp.zeros((), bool),
+                   implicit=jnp.zeros((), bool),
+                   leaf_pte=_u(ALL_PERM_PTE), g_leaf_pte=lp,
+                   level=jnp.where(bare, jnp.zeros((), jnp.int32), lvl))
+
+
+def translate(mem, csrs, priv, virt, va, acc, force_virt=False,
+              hlvx=False, mprv_sum=None):
+    """Full translation honoring privilege & virtualization mode.
+
+    force_virt: hlv/hsv — execute the access as if V=1 (paper §3.3's
+    XlateFlags.forced virtualization). hlvx: require execute permission
+    instead of read (HLVX).
+    Returns XResult."""
+    va = _u(va)
+    mstatus = csrs[C.R_MSTATUS]
+    vsstatus = csrs[C.R_VSSTATUS]
+    virt_eff = jnp.asarray(virt, bool) | jnp.asarray(force_virt, bool)
+    # effective privilege for the access
+    s_bit = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_SUM)) != 0,
+                      (mstatus & _u(C.MSTATUS_SUM)) != 0)
+    mxr = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_MXR)) != 0,
+                    (mstatus & _u(C.MSTATUS_MXR)) != 0)
+    if mprv_sum is not None:
+        s_bit = mprv_sum
+    acc_eff = jnp.where(jnp.asarray(hlvx, bool), _u(ACC_X), _u(acc))
+
+    vsatp = csrs[C.R_VSATP]
+    satp = csrs[C.R_SATP]
+    # hgatp participates only for virtualized accesses; forcing it to BARE
+    # otherwise lets one walk serve both cases (g_translate is identity when
+    # mode=0).
+    hgatp_eff = jnp.where(virt_eff, csrs[C.R_HGATP], _u(0))
+    atp = jnp.where(virt_eff, vsatp, satp)
+    mode = (atp >> _u(C.ATP_MODE_SHIFT)) & _u(0xF)
+    root = (atp & _u(C.ATP_PPN_MASK)) << _u(PAGE_SHIFT)
+
+    no_paging = (mode == 0) | ((priv >= 3) & ~virt_eff)
+
+    # --- first stage (VS or S), PTE fetches G-translated when virtual ------
+    def pte_xlate(gpa, a):
+        # implicit VS-stage PTE fetch: needs R at G-stage, but a fault is
+        # reported with the ORIGINAL access type (spec §hypervisor)
+        return g_translate(mem, hgatp_eff, gpa, a, mxr, cause_acc=acc_eff)
+
+    pa1, fault1, cause1, tval2_1, implicit1, vs_pte, vs_level = _walk(
+        mem, root, 9, va, acc_eff, priv, s_bit, mxr,
+        jnp.zeros((), bool), jnp.zeros((), bool), pte_xlate=pte_xlate)
+
+    gpa_out = jnp.where(no_paging, va, pa1)
+    stage1_fault = ~no_paging & fault1
+
+    # --- second stage on the final GPA -------------------------------------
+    g = g_translate(mem, hgatp_eff, gpa_out, _u(acc), mxr)
+    pa = g.pa
+    g_fault = ~stage1_fault & g.fault
+
+    fault = stage1_fault | g_fault
+    cause = jnp.where(stage1_fault, cause1, g.cause)
+    tval2 = jnp.where(stage1_fault, tval2_1, jnp.where(g_fault, g.tval2,
+                                                       _u(0)))
+    # GVA: tval holds a guest-virtual address whenever the access ran V=1
+    gva = virt_eff & fault
+    vs_pte = jnp.where(no_paging, _u(ALL_PERM_PTE), vs_pte)
+    vs_level = jnp.where(no_paging, jnp.zeros((), jnp.int32), vs_level)
+    implicit = stage1_fault & implicit1
+    return XResult(pa=pa, fault=fault, cause=cause, tval=va, tval2=tval2,
+                   gva=gva, implicit=implicit, leaf_pte=vs_pte,
+                   g_leaf_pte=g.g_leaf_pte, level=vs_level)

@@ -1,0 +1,166 @@
+"""Trap & interrupt routing (paper §3.2, Fig 2).
+
+``route``: delegation chain — M unless medeleg/mideleg delegates to HS,
+then VS if (V=1 and hedeleg/hideleg delegates further).
+``take_trap``: the ``RiscvFault::invoke()`` analogue — updates
+{m,s,vs}status/cause/epc/tval (+ htval/mtval2/htinst/mtinst, GVA, MPV, SPV,
+SPVP), switches privilege/virtualization mode, and returns the handler PC.
+``pending_interrupt``: the per-tick ``CheckInterrupts()`` with the AIA-less
+default priority order MEI>MSI>MTI>SEI>SSI>STI>SGEI>VSEI>VSSI>VSTI.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.hext import csr as C
+
+U64 = jnp.uint64
+
+
+def _u(x):
+    return jnp.asarray(x, U64)
+
+
+class TrapTarget(NamedTuple):
+    priv: jnp.ndarray   # int32 target privilege (3=M, 1=S/HS or VS)
+    virt: jnp.ndarray   # bool target virtualization mode
+
+
+def route(csrs, priv, virt, cause, is_int):
+    """Delegation per §3.2: read {m,h}{e,i}deleg based on current priv."""
+    bit = _u(1) << (cause & _u(63))
+    mdeleg = jnp.where(is_int, csrs[C.R_MIDELEG], csrs[C.R_MEDELEG])
+    hdeleg = jnp.where(is_int, csrs[C.R_HIDELEG], csrs[C.R_HEDELEG])
+    m_delegates = (mdeleg & bit) != 0
+    h_delegates = (hdeleg & bit) != 0
+    # traps from M never delegate down
+    to_hs_or_vs = m_delegates & (priv < 3)
+    # VS-level interrupts delegated via hideleg go straight to VS when V=1;
+    # exceptions likewise require V=1 (HS faults never route to VS)
+    to_vs = to_hs_or_vs & h_delegates & virt
+    tgt_priv = jnp.where(to_hs_or_vs, 1, 3).astype(jnp.int32)
+    tgt_virt = to_vs
+    return TrapTarget(priv=tgt_priv, virt=tgt_virt)
+
+
+def take_trap(csrs, priv, virt, pc, cause, is_int, tval, tval2, gva, tinst):
+    """Apply the trap to the CSR file → (csrs, new_pc, new_priv, new_virt,
+    handled_level) where handled_level ∈ {0:M, 1:HS, 2:VS}."""
+    tgt = route(csrs, priv, virt, cause, is_int)
+    scause = jnp.where(is_int, cause | _u(C.INT_BIT), cause)
+
+    mstatus = csrs[C.R_MSTATUS]
+    hstatus = csrs[C.R_HSTATUS]
+    vsstatus = csrs[C.R_VSSTATUS]
+
+    # ---- to M --------------------------------------------------------------
+    mst = mstatus
+    mst = (mst & ~_u(C.MSTATUS_MPP)) | (_u(priv) << _u(11) & _u(C.MSTATUS_MPP))
+    mie = (mstatus & _u(C.MSTATUS_MIE)) != 0
+    mst = jnp.where(mie, mst | _u(C.MSTATUS_MPIE), mst & ~_u(C.MSTATUS_MPIE))
+    mst = mst & ~_u(C.MSTATUS_MIE)
+    mst = jnp.where(virt, mst | _u(C.MSTATUS_MPV), mst & ~_u(C.MSTATUS_MPV))
+    mst = jnp.where(gva, mst | _u(C.MSTATUS_GVA), mst & ~_u(C.MSTATUS_GVA))
+    csrs_m = csrs
+    csrs_m = csrs_m.at[C.R_MSTATUS].set(mst)
+    csrs_m = csrs_m.at[C.R_MEPC].set(_u(pc))
+    csrs_m = csrs_m.at[C.R_MCAUSE].set(scause)
+    csrs_m = csrs_m.at[C.R_MTVAL].set(_u(tval))
+    csrs_m = csrs_m.at[C.R_MTVAL2].set(_u(tval2))
+    csrs_m = csrs_m.at[C.R_MTINST].set(_u(tinst))
+    pc_m = csrs[C.R_MTVEC] & ~_u(3)
+
+    # ---- to HS -------------------------------------------------------------
+    sst = mstatus
+    sst = jnp.where(priv >= 1, sst | _u(C.MSTATUS_SPP),
+                    sst & ~_u(C.MSTATUS_SPP))
+    sie = (mstatus & _u(C.MSTATUS_SIE)) != 0
+    sst = jnp.where(sie, sst | _u(C.MSTATUS_SPIE), sst & ~_u(C.MSTATUS_SPIE))
+    sst = sst & ~_u(C.MSTATUS_SIE)
+    hst = hstatus
+    hst = jnp.where(virt, hst | _u(C.HSTATUS_SPV), hst & ~_u(C.HSTATUS_SPV))
+    # SPVP: previous privilege *inside* the guest (only meaningful if V was 1)
+    hst = jnp.where(virt & (priv >= 1), hst | _u(C.HSTATUS_SPVP),
+                    jnp.where(virt, hst & ~_u(C.HSTATUS_SPVP), hst))
+    hst = jnp.where(gva, hst | _u(C.HSTATUS_GVA), hst & ~_u(C.HSTATUS_GVA))
+    csrs_h = csrs
+    csrs_h = csrs_h.at[C.R_MSTATUS].set(sst)
+    csrs_h = csrs_h.at[C.R_HSTATUS].set(hst)
+    csrs_h = csrs_h.at[C.R_SEPC].set(_u(pc))
+    csrs_h = csrs_h.at[C.R_SCAUSE].set(scause)
+    csrs_h = csrs_h.at[C.R_STVAL].set(_u(tval))
+    csrs_h = csrs_h.at[C.R_HTVAL].set(_u(tval2))
+    csrs_h = csrs_h.at[C.R_HTINST].set(_u(tinst))
+    pc_h = csrs[C.R_STVEC] & ~_u(3)
+
+    # ---- to VS -------------------------------------------------------------
+    vst = vsstatus
+    vst = jnp.where(priv >= 1, vst | _u(C.MSTATUS_SPP),
+                    vst & ~_u(C.MSTATUS_SPP))
+    vsie = (vsstatus & _u(C.MSTATUS_SIE)) != 0
+    vst = jnp.where(vsie, vst | _u(C.MSTATUS_SPIE),
+                    vst & ~_u(C.MSTATUS_SPIE))
+    vst = vst & ~_u(C.MSTATUS_SIE)
+    # VS-level interrupt causes are presented shifted to S encodings
+    vs_cause = jnp.where(is_int & (cause >= _u(2)) & (cause <= _u(10)),
+                         scause - _u(1), scause)
+    csrs_v = csrs
+    csrs_v = csrs_v.at[C.R_VSSTATUS].set(vst)
+    csrs_v = csrs_v.at[C.R_VSEPC].set(_u(pc))
+    csrs_v = csrs_v.at[C.R_VSCAUSE].set(vs_cause)
+    csrs_v = csrs_v.at[C.R_VSTVAL].set(_u(tval))
+    pc_v = csrs[C.R_VSTVEC] & ~_u(3)
+
+    to_m = tgt.priv == 3
+    to_vs = tgt.virt
+    new_csrs = jnp.where(to_m, csrs_m, jnp.where(to_vs, csrs_v, csrs_h))
+    new_pc = jnp.where(to_m, pc_m, jnp.where(to_vs, pc_v, pc_h))
+    new_priv = tgt.priv
+    new_virt = to_vs
+    handled = jnp.where(to_m, 0, jnp.where(to_vs, 2, 1)).astype(jnp.int32)
+    return new_csrs, new_pc, new_priv, new_virt, handled
+
+
+# interrupt priority: MEI, MSI, MTI, SEI, SSI, STI, SGEI, VSEI, VSSI, VSTI
+_PRIORITY = (11, 3, 7, 9, 1, 5, 12, 10, 2, 6)
+
+
+def pending_interrupt(csrs, priv, virt):
+    """CheckInterrupts(): → (take, cause). Reads mip/mie + mstatus.MIE/SIE +
+    mideleg/hideleg per current privilege (paper Fig 2)."""
+    mip = csrs[C.R_MIP]
+    mie = csrs[C.R_MIE]
+    mideleg = csrs[C.R_MIDELEG]
+    hideleg = csrs[C.R_HIDELEG]
+    mstatus = csrs[C.R_MSTATUS]
+    vsstatus = csrs[C.R_VSSTATUS]
+
+    pend = mip & mie
+    m_enabled = (priv < 3) | (((mstatus & _u(C.MSTATUS_MIE)) != 0) &
+                              (priv == 3))
+    s_enabled = (priv < 1) | ((priv == 1) & ~virt &
+                              ((mstatus & _u(C.MSTATUS_SIE)) != 0))
+    vs_enabled = (virt & (priv < 1)) | \
+        (virt & (priv == 1) & ((vsstatus & _u(C.MSTATUS_SIE)) != 0))
+
+    take = jnp.zeros((), bool)
+    cause = _u(0)
+    for code in _PRIORITY:
+        bit = _u(1 << code)
+        p = (pend & bit) != 0
+        deleg_hs = (mideleg & bit) != 0
+        deleg_vs = deleg_hs & ((hideleg & bit) != 0)
+        # where would it be handled?
+        at_m = ~deleg_hs
+        at_vs = deleg_vs
+        at_hs = deleg_hs & ~deleg_vs
+        en = jnp.where(at_m, m_enabled,
+                       jnp.where(at_vs, vs_enabled & virt,
+                                 s_enabled | (virt & (priv <= 1))))
+        # HS-level interrupts always preempt VS execution
+        fire = p & en
+        cause = jnp.where(~take & fire, _u(code), cause)
+        take = take | fire
+    return take, cause

@@ -1,0 +1,3 @@
+from repro.core.vmem.page_table import TwoStageTable  # noqa: F401
+from repro.core.vmem.allocator import PagePool  # noqa: F401
+from repro.core.vmem.kvcache import PagedKVCache  # noqa: F401

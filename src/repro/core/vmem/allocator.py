@@ -1,0 +1,116 @@
+"""Host page-pool allocator with per-tenant quotas (PMP/isolation analogue).
+
+The pool is a fixed set of host slots (the physical KV pages living in HBM).
+Allocation state is JAX-array based so the whole fault-handling path can run
+inside a jitted scheduler step:
+
+  free_stack: [n_slots] int32 — stack of free slot ids
+  top:        scalar — number of free slots
+  owner:      [n_slots] int32 — tenant owning each slot (-1 free)
+  quota/used: [n_tenants] int32
+
+Isolation invariants (hypothesis-tested in tests/test_vmem.py):
+  * a slot is owned by ≤1 tenant,
+  * used[t] ≤ quota[t],
+  * tenants can never obtain a slot owned by another tenant without it being
+    freed first (no leaks across `free_tenant`, the VM-teardown analogue).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagePool(NamedTuple):
+    free_stack: jnp.ndarray
+    top: jnp.ndarray
+    owner: jnp.ndarray
+    quota: jnp.ndarray
+    used: jnp.ndarray
+
+    @staticmethod
+    def create(n_slots: int, quotas) -> "PagePool":
+        quotas = jnp.asarray(quotas, jnp.int32)
+        return PagePool(
+            free_stack=jnp.arange(n_slots - 1, -1, -1, dtype=jnp.int32),
+            top=jnp.asarray(n_slots, jnp.int32),
+            owner=jnp.full((n_slots,), -1, jnp.int32),
+            quota=quotas,
+            used=jnp.zeros_like(quotas),
+        )
+
+
+def alloc(pool: PagePool, tenant) -> Tuple[PagePool, jnp.ndarray]:
+    """Pop a slot for `tenant`. Returns (pool, slot) with slot=-1 on
+    exhaustion or quota breach (the caller surfaces a capacity fault —
+    the "guest ran out of physical memory" case)."""
+    tenant = jnp.asarray(tenant, jnp.int32)
+    has_free = pool.top > 0
+    under_quota = pool.used[tenant] < pool.quota[tenant]
+    ok = has_free & under_quota
+    idx = jnp.maximum(pool.top - 1, 0)
+    slot = jnp.where(ok, pool.free_stack[idx], -1)
+    new = PagePool(
+        free_stack=pool.free_stack,
+        top=jnp.where(ok, pool.top - 1, pool.top),
+        owner=jnp.where(ok, pool.owner.at[slot].set(tenant), pool.owner),
+        quota=pool.quota,
+        used=jnp.where(ok, pool.used.at[tenant].add(1), pool.used),
+    )
+    return new, slot
+
+
+def free(pool: PagePool, slot) -> PagePool:
+    """Push a slot back (idempotent for already-free slots)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    tenant = pool.owner[slot]
+    ok = (slot >= 0) & (tenant >= 0)
+    idx = pool.top
+    return PagePool(
+        free_stack=jnp.where(
+            ok, pool.free_stack.at[idx].set(slot), pool.free_stack),
+        top=jnp.where(ok, pool.top + 1, pool.top),
+        owner=jnp.where(ok, pool.owner.at[slot].set(-1), pool.owner),
+        quota=pool.quota,
+        used=jnp.where(ok, pool.used.at[tenant].add(-1), pool.used),
+    )
+
+
+def free_tenant(pool: PagePool, tenant) -> PagePool:
+    """VM teardown: release every slot owned by `tenant` in one shot —
+    O(tenant pages) via the stage-2 table, the paper's two-stage win."""
+    tenant = jnp.asarray(tenant, jnp.int32)
+    mine = pool.owner == tenant
+    n = jnp.sum(mine, dtype=jnp.int32)
+    slots = jnp.nonzero(mine, size=pool.owner.shape[0], fill_value=-1)[0]
+    # push owned slots; -1 fills are ignored by writing at clamped positions
+    pos = pool.top + jnp.arange(pool.owner.shape[0], dtype=jnp.int32)
+    valid = slots >= 0
+    fs = pool.free_stack.at[jnp.where(valid, pos, pool.owner.shape[0])].set(
+        jnp.where(valid, slots, 0), mode="drop")
+    return PagePool(
+        free_stack=fs,
+        top=pool.top + n,
+        owner=jnp.where(mine, -1, pool.owner),
+        quota=pool.quota,
+        used=pool.used.at[tenant].set(0),
+    )
+
+
+def check_invariants(pool: PagePool) -> dict:
+    """Host-side invariant audit (used by property tests)."""
+    owner = jax.device_get(pool.owner)
+    used = jax.device_get(pool.used)
+    quota = jax.device_get(pool.quota)
+    top = int(pool.top)
+    free_set = set(jax.device_get(pool.free_stack[:top]).tolist())
+    owned = {i for i, o in enumerate(owner.tolist()) if o >= 0}
+    ok_disjoint = free_set.isdisjoint(owned)
+    ok_cover = len(free_set) + len(owned) == owner.shape[0]
+    ok_quota = all(u <= q for u, q in zip(used.tolist(), quota.tolist()))
+    counts_ok = all(
+        int((owner == t).sum()) == int(used[t]) for t in range(len(used)))
+    return {"disjoint": ok_disjoint, "cover": ok_cover, "quota": ok_quota,
+            "counts": counts_ok}

@@ -1,0 +1,151 @@
+"""Paged KV cache backed by the two-stage tables (DESIGN.md §2b).
+
+The pool holds KV pages for all tenants:
+    k_pool, v_pool: [n_slots, page_size, n_kv_heads, head_dim]
+
+A request's logical page p is resolved via TwoStageTable.translate
+(tenant-local stage 1 → host stage 2); decode attention gathers the
+translated slots. Writes go through the same translation with W permission.
+
+Faults (unmapped logical page / tenant page without a host slot) surface to
+the scheduler which allocates via PagePool and edits the tables — the
+trap-and-emulate loop of the H extension, in scheduler form:
+
+    guest page fault  →  stage-1 edit by the tenant runtime (map_stage1)
+    G-stage fault     →  alloc(pool) + map_stage2 by the "hypervisor"
+                          then hfence(tenant) to keep the fused cache sound
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vmem import allocator as AL
+from repro.core.vmem import page_table as PT
+
+
+class PagedKVCache(NamedTuple):
+    k_pool: jnp.ndarray      # [slots, page, kv_heads, head_dim]
+    v_pool: jnp.ndarray
+    tables: PT.TwoStageTable
+    pool: AL.PagePool
+    page_size: int
+
+    @staticmethod
+    def create(n_slots: int, page_size: int, n_kv_heads: int, head_dim: int,
+               n_tenants: int, reqs_per_tenant: int, logical_pages: int,
+               tenant_pages: int, quotas=None, dtype=jnp.bfloat16):
+        quotas = quotas if quotas is not None else [tenant_pages] * n_tenants
+        return PagedKVCache(
+            k_pool=jnp.zeros((n_slots, page_size, n_kv_heads, head_dim),
+                             dtype),
+            v_pool=jnp.zeros((n_slots, page_size, n_kv_heads, head_dim),
+                             dtype),
+            tables=PT.TwoStageTable.create(n_tenants, reqs_per_tenant,
+                                           logical_pages, tenant_pages),
+            pool=AL.PagePool.create(n_slots, quotas),
+            page_size=page_size,
+        )
+
+
+# ---------------------------------------------------------------------------
+# scheduler-side fault handling (the hypervisor loop)
+# ---------------------------------------------------------------------------
+
+def ensure_mapped(kv: PagedKVCache, tenant: int, req: int,
+                  page: int) -> Tuple["PagedKVCache", bool]:
+    """Host-side: make (tenant, req, page) resolvable, allocating through
+    both stages as needed. Returns (kv, ok)."""
+    tr = PT.translate(kv.tables, tenant, req, page, use_fused=False)
+    if not bool(tr.fault):
+        return kv, True
+    tables, pool = kv.tables, kv.pool
+    if int(tr.stage) == 1:
+        # stage-1 fault: tenant runtime maps logical → next tenant page.
+        # pick the first unmapped tenant page (host-side python is fine here;
+        # this is the control plane, not the data plane)
+        g_row = jax.device_get(tables.g_table[tenant])
+        vs_row = jax.device_get(tables.vs_table[tenant, req])
+        used = set(int(x) for x in vs_row.tolist() if x >= 0)
+        cand = [i for i in range(g_row.shape[0]) if i not in used]
+        if not cand:
+            return kv, False
+        tp = cand[0]
+        tables = PT.map_stage1(tables, tenant, req, page, tp)
+        tr = PT.translate(tables, tenant, req, page, use_fused=False)
+    if bool(tr.fault):  # stage-2: hypervisor allocates a host slot
+        tp = int(jax.device_get(tables.vs_table[tenant, req, page]))
+        pool, slot = AL.alloc(pool, tenant)
+        if int(slot) < 0:
+            return kv._replace(tables=tables, pool=pool), False
+        tables = PT.map_stage2(tables, tenant, tp, slot)
+        tables = PT.hfence(tables, tenant)
+    tables = PT.fill_fused(tables, tenant, req, page)
+    return kv._replace(tables=tables, pool=pool), True
+
+
+def evict_tenant(kv: PagedKVCache, tenant: int) -> "PagedKVCache":
+    """Tear down a tenant: one stage-2 sweep + pool free — O(tenant pages),
+    independent of how many requests/logical pages the tenant had."""
+    pool = AL.free_tenant(kv.pool, tenant)
+    tables = kv.tables._replace(
+        g_table=kv.tables.g_table.at[tenant].set(PT.INVALID),
+        vs_table=kv.tables.vs_table.at[tenant].set(PT.INVALID),
+        vs_perm=kv.tables.vs_perm.at[tenant].set(0))
+    tables = PT.hfence(tables, tenant)
+    return kv._replace(tables=tables, pool=pool)
+
+
+# ---------------------------------------------------------------------------
+# data plane (jittable)
+# ---------------------------------------------------------------------------
+
+def write_token(kv: PagedKVCache, tenant, req, pos, k, v):
+    """Append one token's K/V at sequence position `pos` (page must be
+    mapped): k,v [n_kv_heads, head_dim]."""
+    page = pos // kv.page_size
+    off = pos % kv.page_size
+    tr = PT.translate(kv.tables, tenant, req, page, acc_write=True)
+    slot = jnp.maximum(tr.slot, 0)
+    k_pool = kv.k_pool.at[slot, off].set(
+        jnp.where(tr.fault, kv.k_pool[slot, off], k.astype(kv.k_pool.dtype)))
+    v_pool = kv.v_pool.at[slot, off].set(
+        jnp.where(tr.fault, kv.v_pool[slot, off], v.astype(kv.v_pool.dtype)))
+    return kv._replace(k_pool=k_pool, v_pool=v_pool), tr.fault
+
+
+def gather_kv(kv: PagedKVCache, tenant, req, n_pages: int):
+    """Decode-side gather: [n_pages*page, kv_heads, hd] K/V for one request.
+    Unmapped pages read as zeros (masked by length in attention)."""
+    tr = PT.translate_block(kv.tables, tenant, req, n_pages)
+    slots = jnp.maximum(tr.slot, 0)
+    k = kv.k_pool[slots]                     # [pages, page, kvh, hd]
+    v = kv.v_pool[slots]
+    mask = (~tr.fault)[:, None, None, None]
+    k = jnp.where(mask, k, 0).reshape(-1, *kv.k_pool.shape[2:])
+    v = jnp.where(mask, v, 0).reshape(-1, *kv.v_pool.shape[2:])
+    return k, v, tr
+
+
+def paged_decode_attention(kv: PagedKVCache, tenant, req, q, length,
+                           scale: float):
+    """Single-request decode attention through the two-stage translation.
+
+    q: [n_heads, head_dim]; length: valid tokens. Returns [n_heads, hd].
+    (The Pallas kernels/paged_attention computes this without materializing
+    the gather; this jnp path is the oracle.)"""
+    n_pages = kv.tables.fused.shape[-1]
+    k, v, _ = gather_kv(kv, tenant, req, n_pages)
+    H = q.shape[0]
+    KV = k.shape[1]
+    G = H // KV
+    qf = q.reshape(KV, G, -1).astype(jnp.float32)
+    kf = k.astype(jnp.float32)               # [T, KV, hd]
+    scores = jnp.einsum("kgh,tkh->kgt", qf, kf) * scale
+    t_idx = jnp.arange(kf.shape[0])
+    scores = jnp.where(t_idx[None, None, :] < length, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("kgt,tkh->kgh", w, v.astype(jnp.float32))
+    return out.reshape(H, -1).astype(q.dtype)

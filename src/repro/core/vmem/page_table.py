@@ -1,0 +1,137 @@
+"""Two-stage page tables for the KV-cache virtual memory (DESIGN.md §2b).
+
+Mirrors the H extension exactly:
+
+  stage 1 (VS-stage / ``vsatp``):  per-request logical page → tenant-physical
+  stage 2 (G-stage  / ``hgatp``):  tenant-physical → host pool slot
+
+Entries carry a valid bit and R/W permission bits (a read-only snapshot page
+can be shared between requests — copy-on-write for shared prompt prefixes;
+the permission composition matches the TLB discussion in paper §3.5(3)).
+
+All tables are dense int32 arrays so translation is a pair of gathers (the
+Pallas ``kernels/pagewalk`` computes the same function with VMEM-resident
+tables). The fused cache (logical→host) is the TLB analogue and must be
+invalidated by ``hfence()`` after any stage-2 edit — tests assert the
+translate-after-hfence == fresh-walk invariant.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+
+# permission bits (stage-1 entries)
+PERM_R = 1
+PERM_W = 2
+
+
+class TwoStageTable(NamedTuple):
+    """Batched tables for T tenants.
+
+    vs_table:  [T, max_req_per_tenant, max_logical_pages] → tenant page id
+    vs_perm:   same shape, permission bits
+    g_table:   [T, max_tenant_pages]                      → host slot
+    fused:     [T, max_req_per_tenant, max_logical_pages] → host slot (TLB)
+    fused_ok:  validity of fused entries
+    """
+    vs_table: jnp.ndarray
+    vs_perm: jnp.ndarray
+    g_table: jnp.ndarray
+    fused: jnp.ndarray
+    fused_ok: jnp.ndarray
+
+    @staticmethod
+    def create(n_tenants: int, reqs_per_tenant: int, logical_pages: int,
+               tenant_pages: int) -> "TwoStageTable":
+        shp1 = (n_tenants, reqs_per_tenant, logical_pages)
+        return TwoStageTable(
+            vs_table=jnp.full(shp1, INVALID, jnp.int32),
+            vs_perm=jnp.zeros(shp1, jnp.int32),
+            g_table=jnp.full((n_tenants, tenant_pages), INVALID, jnp.int32),
+            fused=jnp.full(shp1, INVALID, jnp.int32),
+            fused_ok=jnp.zeros(shp1, bool),
+        )
+
+
+class Translation(NamedTuple):
+    slot: jnp.ndarray      # host pool slot (or -1)
+    fault: jnp.ndarray     # bool: translation fault (either stage)
+    stage: jnp.ndarray     # 1 = VS-stage fault, 2 = G-stage fault, 0 = ok
+
+
+def translate(t: TwoStageTable, tenant, req, page, acc_write=False,
+              use_fused=True) -> Translation:
+    """Translate (tenant, request, logical page) → host slot.
+
+    Vectorizes over any leading batch dims of tenant/req/page."""
+    tenant = jnp.asarray(tenant, jnp.int32)
+    req = jnp.asarray(req, jnp.int32)
+    page = jnp.asarray(page, jnp.int32)
+    fused = t.fused[tenant, req, page]
+    fused_ok = t.fused_ok[tenant, req, page]
+    # stage 1
+    tp = t.vs_table[tenant, req, page]
+    perm = t.vs_perm[tenant, req, page]
+    want = jnp.where(acc_write, PERM_W, PERM_R)
+    s1_fault = (tp < 0) | ((perm & want) == 0)
+    # stage 2 — isolation: a tenant can only name its own g_table row
+    slot = t.g_table[tenant, jnp.maximum(tp, 0)]
+    s2_fault = ~s1_fault & (slot < 0)
+    walk_slot = jnp.where(s1_fault | s2_fault, INVALID, slot)
+    out_slot = jnp.where(use_fused & fused_ok, fused, walk_slot)
+    fault = jnp.where(use_fused & fused_ok, False, s1_fault | s2_fault)
+    stage = jnp.where(use_fused & fused_ok, 0,
+                      jnp.where(s1_fault, 1, jnp.where(s2_fault, 2, 0)))
+    return Translation(slot=out_slot, fault=fault, stage=stage)
+
+
+def map_stage1(t: TwoStageTable, tenant, req, page, tenant_page,
+               perm=PERM_R | PERM_W) -> TwoStageTable:
+    """Guest (tenant runtime) edits its own stage-1 table."""
+    return t._replace(
+        vs_table=t.vs_table.at[tenant, req, page].set(tenant_page),
+        vs_perm=t.vs_perm.at[tenant, req, page].set(perm),
+        # stage-1 edits invalidate that fused line only
+        fused_ok=t.fused_ok.at[tenant, req, page].set(False))
+
+
+def map_stage2(t: TwoStageTable, tenant, tenant_page, slot) -> TwoStageTable:
+    """Hypervisor (scheduler) maps a tenant page to a host slot."""
+    return t._replace(g_table=t.g_table.at[tenant, tenant_page].set(slot))
+
+
+def unmap_stage2(t: TwoStageTable, tenant, tenant_page) -> TwoStageTable:
+    return t._replace(
+        g_table=t.g_table.at[tenant, tenant_page].set(INVALID))
+
+
+def hfence(t: TwoStageTable, tenant=None) -> TwoStageTable:
+    """hfence.gvma analogue: invalidate fused (TLB) entries — all tenants or
+    one tenant's."""
+    if tenant is None:
+        return t._replace(fused_ok=jnp.zeros_like(t.fused_ok))
+    return t._replace(fused_ok=t.fused_ok.at[tenant].set(False))
+
+
+def fill_fused(t: TwoStageTable, tenant, req, page) -> TwoStageTable:
+    """Populate the fused cache for given coordinates (post-walk TLB fill)."""
+    tr = translate(t, tenant, req, page, use_fused=False)
+    ok = ~tr.fault
+    return t._replace(
+        fused=t.fused.at[tenant, req, page].set(
+            jnp.where(ok, tr.slot, INVALID)),
+        fused_ok=t.fused_ok.at[tenant, req, page].set(ok))
+
+
+def translate_block(t: TwoStageTable, tenant, req, n_pages: int,
+                    acc_write=False) -> Translation:
+    """Translate all logical pages [0, n_pages) of one request — the decode
+    path (gathers the whole per-request page list at once)."""
+    pages = jnp.arange(n_pages, dtype=jnp.int32)
+    return translate(t, jnp.full((n_pages,), tenant, jnp.int32),
+                     jnp.full((n_pages,), req, jnp.int32), pages,
+                     acc_write=acc_write)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical paths.
+
+Each kernel package has:
+  ref.py    — pure-jnp oracle (also the CPU/dry-run lowering path)
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd dispatching wrapper (TPU → kernel, CPU → ref;
+              `interpret=True` available everywhere for validation)
+"""

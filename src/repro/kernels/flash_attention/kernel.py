@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: causal flash attention (fwd), GQA + sliding window.
+
+Grid (B*KV*G, nq, nk) — nk sequential (innermost) so online-softmax state
+persists in VMEM scratch across K blocks of one Q block. Causal/window
+pruning happens at two levels:
+  * whole K-blocks past the diagonal are skipped via @pl.when (no FLOPs),
+  * the diagonal block applies the elementwise mask.
+
+Block sizes default to (BQ=256, BK=512) — MXU-aligned (≥128) and a VMEM
+working set of q(256×hd) + k,v(512×hd) + acc ≈ 0.7 MiB at hd=128, bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, window, bq, bk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = iq * bq
+    k0 = ik * bk
+    # block-level causal/window pruning
+    relevant = (k0 <= q0 + bq - 1)
+    if window:
+        relevant &= (k0 + bk - 1) > (q0 - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)       # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)       # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.einsum("qh,kh->qk", q, k) * scale
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > (qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[...] = (acc_ref[...] / denom)[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "window", "bq", "bk",
+                                    "interpret"))
+def flash_attention_kernel(q, k, v, scale: float, window: int = 0,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = False):
+    """q [B,S,H,hd]; k,v [B,S,KV,hd] → [B,S,H,hd] (causal, optional SWA)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    # layout: fold heads into the batch grid dim; q rows per (b, kv, g)
+    qf = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B * KV * G, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    grid = (B * KV * G, pl.cdiv(S, bq), pl.cdiv(S, bk))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, iq, ik: (h // G, ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, iq, ik: (h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV * G, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4).reshape(
+        B, S, H, hd)

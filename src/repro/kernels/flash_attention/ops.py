@@ -1,0 +1,17 @@
+"""Dispatcher: TPU → Pallas flash attention; CPU/dry-run → jnp ref."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def flash_attention(q, k, v, scale: float, window: int = 0,
+                    force: str = "auto"):
+    on_tpu = jax.default_backend() == "tpu"
+    if force == "kernel" or (force == "auto" and on_tpu):
+        return flash_attention_kernel(q, k, v, scale, window)
+    if force == "interpret":
+        return flash_attention_kernel(q, k, v, scale, window, interpret=True)
+    return ref.flash_attention_ref(q, k, v, scale, window)

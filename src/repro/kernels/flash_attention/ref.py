@@ -1,0 +1,24 @@
+"""jnp oracle: causal (optionally windowed) GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, scale, window: int = 0):
+    """q [B,S,H,hd]; k,v [B,S,KV,hd] → [B,S,H,hd]. Causal; window>0 = SWA."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > (qpos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: paged decode attention (flash-decode over the
+two-stage-translated page list).
+
+The page table (already fused/translated: logical → host slot) is a
+*scalar-prefetch* operand: the BlockSpec index_map of the K/V pool operands
+reads it to stream exactly the pages owned by the request — KV pages never
+materialize contiguously (contrast the jnp ref which gathers).
+
+Grid: (B, n_pages) — last dim sequential on TPU, so the online-softmax
+state (m, l, acc) lives in VMEM scratch across the page steps of a request.
+
+VMEM budget per step: one K page + one V page
+  = 2 × page(64) × KV(≤16) × hd(≤256) × 2B ≈ 1 MiB, well under 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_map_ref, len_ref,          # scalar prefetch
+            q_ref, k_ref, v_ref,            # blocks (leading dim 1)
+            o_ref,                          # output block (leading dim 1)
+            m_ref, l_ref, acc_ref):         # VMEM scratch
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    n_pages = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page, KV, hd = k_ref.shape[1], k_ref.shape[2], k_ref.shape[3]
+    H = q_ref.shape[1]
+    G = H // KV
+
+    q = q_ref[0].astype(jnp.float32).reshape(KV, G, hd)
+    k = k_ref[0].astype(jnp.float32)          # [page, KV, hd]
+    v = v_ref[0].astype(jnp.float32)
+
+    length = len_ref[b]
+    mapped = page_map_ref[b, p] >= 0
+    t_idx = p * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    valid = (t_idx < length) & mapped
+
+    s = jnp.einsum("kgh,tkh->kgt", q, k)      # [KV, G, page]
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                       # [KV, G]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new[..., None])
+    pexp = jnp.where(valid[None, None, :], pexp, 0.0)
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+        jnp.einsum("kgt,tkh->kgh", pexp, v)
+
+    @pl.when(p == n_pages - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        o_ref[...] = (acc_ref[...] / denom).reshape(1, H, hd).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_kernel(q, k_pool, v_pool, page_map, lengths,
+                           scale: float, interpret: bool = False):
+    """q [B,H,hd]; {k,v}_pool [slots,page,KV,hd]; page_map [B,n_pages] int32
+    (host slots, -1 unmapped); lengths [B] int32 → [B,H,hd]."""
+    B, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    n_pages = page_map.shape[1]
+    q = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    G = H // KV
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p, pm, ln: (b, 0, 0)),
+            # stream exactly the page named by the (prefetched) page table
+            pl.BlockSpec((1, page, KV, hd),
+                         lambda b, p, pm, ln: (jnp.maximum(pm[b, p], 0),
+                                               0, 0, 0)),
+            pl.BlockSpec((1, page, KV, hd),
+                         lambda b, p, pm, ln: (jnp.maximum(pm[b, p], 0),
+                                               0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, p, pm, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(page_map, lengths, q, k_pool, v_pool)

@@ -1,0 +1,20 @@
+"""Dispatcher: TPU → Pallas flash-decode over translated pages; CPU → ref."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention import ref
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+
+
+def paged_attention(q, k_pool, v_pool, page_map, lengths, scale: float,
+                    force: str = "auto"):
+    on_tpu = jax.default_backend() == "tpu"
+    if force == "kernel" or (force == "auto" and on_tpu):
+        return paged_attention_kernel(q, k_pool, v_pool, page_map, lengths,
+                                      scale)
+    if force == "interpret":
+        return paged_attention_kernel(q, k_pool, v_pool, page_map, lengths,
+                                      scale, interpret=True)
+    return ref.paged_attention_ref(q, k_pool, v_pool, page_map, lengths,
+                                   scale)

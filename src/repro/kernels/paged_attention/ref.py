@@ -1,0 +1,34 @@
+"""jnp oracle for paged decode attention (GQA, online-softmax-free)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_map, lengths, scale):
+    """q [B,H,hd]; {k,v}_pool [slots, page, KV, hd]; page_map [B, n_pages]
+    int32 (host slots, -1 unmapped); lengths [B] → out [B,H,hd]."""
+    B, H, hd = q.shape
+    page = k_pool.shape[1]
+    KV = k_pool.shape[2]
+    G = H // KV
+
+    def one(qb, pages_b, len_b):
+        slots = jnp.maximum(pages_b, 0)
+        k = k_pool[slots]                       # [n_pages, page, KV, hd]
+        v = v_pool[slots]
+        valid_page = (pages_b >= 0)[:, None]
+        T = k.shape[0] * page
+        k = k.reshape(T, KV, hd)
+        v = v.reshape(T, KV, hd)
+        t_idx = jnp.arange(T)
+        mask = (t_idx < len_b) & valid_page.repeat(page, 1).reshape(-1)
+        qg = qb.reshape(KV, G, hd).astype(jnp.float32)
+        scores = jnp.einsum("kgh,tkh->kgt", qg,
+                            k.astype(jnp.float32)) * scale
+        scores = jnp.where(mask[None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("kgt,tkh->kgh", w, v.astype(jnp.float32))
+        return out.reshape(H, hd)
+
+    return jax.vmap(one)(q, page_map, lengths).astype(q.dtype)

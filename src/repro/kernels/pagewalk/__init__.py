@@ -1,0 +1,1 @@
+from repro.kernels.pagewalk.ops import two_stage_translate  # noqa: F401

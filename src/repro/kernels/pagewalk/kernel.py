@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: batched two-stage table walk.
+
+TPU adaptation of gem5's pointer-chasing ``stepWalk()``: both table stages
+are VMEM-resident (they are small: stage-1 [T,R,P] and stage-2 [T,G] int32),
+and a *vector* of (tenant, req, page) queries is translated per grid step
+with masked gathers — the MXU stays free, this is pure VPU/VMEM work.
+
+Block layout:
+  queries are blocked along the batch dim (BLOCK_B at a time);
+  both tables are broadcast (whole-table blocks) — they fit VMEM easily
+  (e.g. 8 tenants × 64 reqs × 512 pages × 4 B = 1 MiB stage-1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PERM_R, PERM_W = 1, 2
+BLOCK_B = 512
+
+
+def _kernel(vs_ref, perm_ref, g_ref, tenant_ref, req_ref, page_ref, w_ref,
+            slot_out, fault_out, stage_out):
+    t = tenant_ref[...]
+    r = req_ref[...]
+    p = page_ref[...]
+    ww = w_ref[...]
+    T, R, P = vs_ref.shape
+    G = g_ref.shape[1]
+    # stage 1 gather: flatten index (VMEM gather)
+    flat1 = (t * R + r) * P + p
+    vs_flat = vs_ref[...].reshape(-1)
+    perm_flat = perm_ref[...].reshape(-1)
+    tp = vs_flat[flat1]
+    perm = perm_flat[flat1]
+    want = jnp.where(ww != 0, PERM_W, PERM_R)
+    s1_fault = (tp < 0) | ((perm & want) == 0)
+    # stage 2 gather
+    flat2 = t * G + jnp.maximum(tp, 0)
+    slot = g_ref[...].reshape(-1)[flat2]
+    s2_fault = ~s1_fault & (slot < 0)
+    fault = s1_fault | s2_fault
+    slot_out[...] = jnp.where(fault, -1, slot).astype(jnp.int32)
+    fault_out[...] = fault.astype(jnp.int32)
+    stage_out[...] = jnp.where(s1_fault, 1,
+                               jnp.where(s2_fault, 2, 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def two_stage_translate_kernel(vs_table, vs_perm, g_table, tenant, req, page,
+                               want_write, interpret: bool = False):
+    B = tenant.shape[0]
+    bb = min(BLOCK_B, B)
+    grid = (pl.cdiv(B, bb),)
+    qspec = pl.BlockSpec((bb,), lambda i: (i,))
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    out_shape = [jax.ShapeDtypeStruct((B,), jnp.int32)] * 3
+    slot, fault, stage = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[full(vs_table), full(vs_perm), full(g_table),
+                  qspec, qspec, qspec, qspec],
+        out_specs=[qspec, qspec, qspec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vs_table, vs_perm, g_table, tenant, req, page,
+      want_write.astype(jnp.int32))
+    return slot, fault.astype(bool), stage

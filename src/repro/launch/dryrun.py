@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, and
+extract the roofline terms (§Roofline of EXPERIMENTS.md).
+
+The two XLA_FLAGS lines above MUST run before any other import — jax locks
+the host device count at first init. Smoke tests / benches never import this
+module, so they see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm_2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch import specs as SPECS
+from repro.launch.mesh import make_production_mesh
+from repro.launch import analytic
+from repro.launch.roofline import (HBM_PER_CHIP, HBM_BW, LINK_BW, PEAK_FLOPS,
+                                   collective_bytes,
+                                   collective_bytes_corrected)
+from repro.models import activation_sharding
+from repro.models import transformer as tf
+from repro.optim.schedule import cosine_schedule
+from repro.runtime.sharding import ShardingPolicy, default_policy
+from repro.runtime.train_loop import build_train_step
+
+# Per-arch dry-run overrides: dtype/microbatching tuned so the big configs
+# fit v5e HBM (documented in EXPERIMENTS.md §Dry-run).
+ARCH_OVERRIDES = {
+    "nemotron_4_340b": {"param_dtype": "bfloat16", "microbatches": 16,
+                        "seq_shard": True, "remat": "full",
+                        "low_mem_opt": True},   # bf16 m/v + bf16 grad accum
+    "qwen15_32b": {"microbatches": 8, "seq_shard": True},      # 40 heads
+    "qwen3_moe_30b_a3b": {"microbatches": 8},
+    "recurrentgemma_9b": {"microbatches": 8},
+    "minicpm_2b": {"microbatches": 8},  # 36 heads → scores hook
+    "granite_moe_3b_a800m": {"microbatches": 8},  # 24 heads
+    "h2o_danube_3_4b": {"microbatches": 8},
+    "internvl2_2b": {"microbatches": 8},
+    "whisper_base": {"microbatches": 4},  # 8 heads
+    "mamba2_130m": {"microbatches": 2},
+}
+
+
+def _fb_shardings(mesh, pol, spec_tree, shape_tree):
+    """Resolve logical specs → NamedShardings, dropping any axis that does
+    not divide the corresponding dim (vocab/expert/head remainders)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(spec, sds):
+        phys = pol.resolve(spec)
+        new = []
+        for i, ax in enumerate(tuple(phys)):
+            if ax is None or i >= len(sds.shape):
+                new.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            new.append(ax if (n and sds.shape[i] % n == 0) else None)
+        return NamedSharding(mesh, P(*new))
+
+    import jax as _jax
+    return _jax.tree.map(one, spec_tree, shape_tree,
+                         is_leaf=lambda x: isinstance(x, P))
+
+
+def _policy_for(mesh, mode: str, arch: str,
+                policy_name: str = "default") -> ShardingPolicy:
+    ov = ARCH_OVERRIDES.get(arch, {})
+    mb = ov.get("microbatches", 8) if mode == "train" else 1
+    pol = default_policy(mesh, microbatches=mb)
+    if policy_name == "tp_only":
+        from repro.runtime.sharding import tp_only_policy
+        pol = tp_only_policy(mesh, microbatches=mb)
+    return pol
+
+
+def _install_seq_shard(mesh, pol, on: bool, scores_on: bool = False):
+    """Sequence-parallel activation constraint (large archs); scores_on
+    installs the score-matrix constraint (archs whose head count does not
+    divide tp would otherwise replicate S×T score buffers)."""
+    dp = pol.rules.get("dp")
+    tp = pol.rules.get("tp")
+
+    def block_c(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, tp, None)))
+        return x
+
+    def embed_c(x):
+        spec = P(dp, tp, None) if on else P(dp, None, None)
+        if x.ndim == 3 and x.shape[1] % 16 == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+
+    def logits_c(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, tp)))
+        return x
+
+    def scores_c(x):
+        # shard the *query* seq dim of [B,H,S,T] — softmax over keys stays
+        # local, composes with SP. Batch stays on dp (None = replicate!).
+        if x.ndim == 4 and x.shape[-2] % 16 == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, tp, None)))
+        return x
+
+    def inner_c(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, None)))
+        return x
+
+    activation_sharding.set_constraint(block_c if on else None, "block")
+    activation_sharding.set_constraint(inner_c if on else None, "inner")
+    activation_sharding.set_constraint(embed_c, "embed")
+    activation_sharding.set_constraint(logits_c, "logits")
+    activation_sharding.set_constraint(scores_c if scores_on else None,
+                                       "scores")
+
+    def moe_c(x):
+        if x.ndim == 4 and x.shape[1] % 16 == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, tp, None, None)))
+        return x
+
+    activation_sharding.set_constraint(moe_c, "moe")
+
+    def moe_rep_c(x):
+        if x.ndim == 4:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, None, None)))
+        return x
+
+    activation_sharding.set_constraint(moe_rep_c, "moe_rep")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             policy_name: str = "default", seq_shard: Optional[bool] = None,
+             microbatches: Optional[int] = None,
+             param_dtype: Optional[str] = None,
+             donate: bool = True) -> dict:
+    cfg = get_config(arch)
+    ov0 = ARCH_OVERRIDES.get(arch, {})
+    if "remat" in ov0:
+        cfg = dataclasses.replace(cfg, remat=ov0["remat"])
+    shape = SHAPES[shape_name]
+    mode = shape.kind
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mode": mode,
+           "multi_pod": multi_pod, "policy": policy_name}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.reshape(-1))
+    pol = _policy_for(mesh, mode, arch, policy_name)
+    ov = ARCH_OVERRIDES.get(arch, {})
+    if microbatches is not None and mode == "train":
+        pol = dataclasses.replace(pol, microbatches=microbatches)
+    pdtype = param_dtype or ov.get("param_dtype")
+    seq_on = ov.get("seq_shard", False) if seq_shard is None else seq_shard
+    heads_div = cfg.n_heads % 16 == 0   # flat-head attention: H is the axis
+    _install_seq_shard(mesh, pol, seq_on and mode == "train",
+                       scores_on=(not heads_div) and mode != "decode")
+    if mode == "decode":
+        # flash-decode sharding: scores stay sharded on the KEY dim (the
+        # cache's seq shards) — softmax/out reduce small partials instead of
+        # all-gathering the KV cache every step (§Perf qwen3-decode iter 2)
+        dp_ax = pol.rules.get("dp")
+        tp_ax = pol.rules.get("tp")
+
+        def scores_decode_c(x):
+            if x.ndim == 4 and x.shape[-1] % 16 == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dp_ax, None, None, tp_ax)))
+            return x
+
+        activation_sharding.set_constraint(scores_decode_c, "scores")
+
+    t0 = time.time()
+    try:
+        if mode == "train":
+            dtype = jnp.bfloat16 if pdtype == "bfloat16" else None
+            pshapes, pspecs = SPECS.abstract_params(cfg, dtype=dtype)
+            low_mem = ov.get("low_mem_opt", False)
+            oshapes, ospecs = SPECS.abstract_opt_state(
+                pshapes, pspecs,
+                dtype=jnp.bfloat16 if low_mem else jnp.float32)
+            bshapes, bspecs = SPECS.train_inputs(cfg, shape)
+            psh = _fb_shardings(mesh, pol, pspecs, pshapes)
+            step = build_train_step(
+                cfg, pol, cosine_schedule(3e-4, 100, 10000),
+                grad_shardings=psh,
+                accum_dtype=jnp.bfloat16 if low_mem else jnp.float32)
+            in_sh = (psh,
+                     _fb_shardings(mesh, pol, ospecs, oshapes),
+                     _fb_shardings(mesh, pol, bspecs, bshapes),
+                     NamedSharding(mesh, P()))
+            out_sh = (in_sh[0], in_sh[1], NamedSharding(mesh, P()))
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1) if donate else ())
+            args = (pshapes, oshapes, bshapes,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+        elif mode == "prefill":
+            pshapes, pspecs = SPECS.abstract_params(cfg, dtype=jnp.bfloat16)
+            (tokens, cache_s, extra), (tsp, csp, esp) = \
+                SPECS.prefill_inputs(cfg, shape)
+
+            def step(params, tokens, cache, extra=None):
+                return tf.prefill(params, cfg, tokens, cache,
+                                  extra_embeds=extra)
+
+            in_sh = [_fb_shardings(mesh, pol, pspecs, pshapes),
+                     _fb_shardings(mesh, pol, tsp, tokens),
+                     _fb_shardings(mesh, pol, csp, cache_s)]
+            args = [pshapes, tokens, cache_s]
+            if extra is not None:
+                in_sh.append(_fb_shardings(mesh, pol, esp, extra))
+                args.append(extra)
+            logit_sd = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.padded_vocab), jnp.bfloat16)
+            out_sh = (_fb_shardings(mesh, pol, P("dp", "tp"), logit_sd),
+                      in_sh[2])
+            fn = jax.jit(step, in_shardings=tuple(in_sh), out_shardings=out_sh,
+                         donate_argnums=(2,) if donate else ())
+            args = tuple(args)
+        else:  # decode
+            pshapes, pspecs = SPECS.abstract_params(cfg, dtype=jnp.bfloat16)
+            (token, pos, cache_s), (ksp, psp, csp) = \
+                SPECS.decode_inputs(cfg, shape)
+
+            def step(params, token, pos, cache):
+                return tf.decode_step(params, cfg, token, pos, cache)
+
+            in_sh = (_fb_shardings(mesh, pol, pspecs, pshapes),
+                     _fb_shardings(mesh, pol, ksp, token),
+                     _fb_shardings(mesh, pol, psp, pos),
+                     _fb_shardings(mesh, pol, csp, cache_s))
+            logit_sd = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.padded_vocab), jnp.bfloat16)
+            out_sh = (_fb_shardings(mesh, pol, P("dp", "tp"), logit_sd),
+                      in_sh[3])
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(3,) if donate else ())
+            args = (pshapes, token, pos, cache_s)
+
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_txt = compiled.as_text()
+        coll_raw = collective_bytes(hlo_txt)
+        coll = collective_bytes_corrected(hlo_txt)
+        # --- roofline terms: analytic compute/memory (HLO while bodies are
+        # counted once — see launch/analytic.py), corrected collectives ----
+        remat = cfg.remat
+        pbytes = 2 if (pdtype == "bfloat16" or mode != "train") else 4
+        ex_flops = analytic.exec_flops(cfg, shape, mode, remat)
+        us_flops = analytic.useful_flops(cfg, shape, mode)
+        hbm = analytic.hbm_bytes(cfg, shape, mode, pbytes)
+        t_compute = ex_flops / (chips * PEAK_FLOPS)
+        t_memory = hbm / (chips * HBM_BW)
+        coll_dev = float(sum(coll.values()))
+        t_coll = coll_dev / LINK_BW
+        t_max = max(t_compute, t_memory, t_coll, 1e-12)
+        dominant = {t_compute: "compute", t_memory: "memory",
+                    t_coll: "collective"}[t_max]
+        terms = {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "exec_flops": ex_flops,
+            "model_flops": us_flops,
+            "useful_flops_fraction": us_flops / max(ex_flops, 1.0),
+            "analytic_hbm_bytes": hbm,
+            "collective_bytes_per_dev": coll_dev,
+            "collective_by_kind": coll,
+            "collective_by_kind_raw_once": coll_raw,
+            "hlo_flops_per_dev_once": float(cost.get("flops", 0.0)),
+            "hlo_bytes_per_dev_once": float(cost.get("bytes accessed", 0.0)),
+            "roofline_fraction": (us_flops / (chips * PEAK_FLOPS)) / t_max,
+            "memory_bound_fraction": t_memory / t_max,
+        }
+        per_dev_bytes = (mem.argument_size_in_bytes +
+                         mem.output_size_in_bytes -
+                         mem.alias_size_in_bytes +
+                         mem.temp_size_in_bytes)
+        rec.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_live_bytes": per_dev_bytes,
+                "fits_v5e_16g": bool(per_dev_bytes <= HBM_PER_CHIP),
+            },
+            roofline=terms,
+            microbatches=pol.microbatches,
+            seq_shard=bool(seq_on and mode == "train"),
+            param_dtype=pdtype or "float32",
+        )
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    finally:
+        activation_sharding.clear()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="default")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}"
+            if args.policy != "default":
+                tag += f"__{args.policy}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip existing] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            rec = run_cell(arch, shape, multi_pod, policy_name=args.policy)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(f"  ok: compile {rec['compile_s']}s  "
+                      f"mem/dev {rec['memory']['per_device_live_bytes']/1e9:.2f}GB "
+                      f"terms(c/m/x) {r['t_compute_s']:.3e}/"
+                      f"{r['t_memory_s']:.3e}/{r['t_collective_s']:.3e} "
+                      f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}",
+                      flush=True)
+            else:
+                print(f"  {rec['status']}: {rec.get('reason', rec.get('error'))}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips;
+multi-pod: (pod=2, data=16, model=16) = 512 chips — the `pod` axis carries
+only data-parallel gradient traffic (DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (same axis names, size 1)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

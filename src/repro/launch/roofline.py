@@ -1,0 +1,171 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class, per chip):
+  peak_flops  = 197e12 bf16 FLOP/s
+  hbm_bw      = 819e9  B/s
+  link_bw     = 50e9   B/s ICI
+
+Terms (per train/serve step, seconds):
+  compute    = HLO_FLOPs / (chips × peak)         [cost_analysis 'flops']
+  memory     = HLO_bytes / (chips × hbm_bw)       [cost_analysis 'bytes accessed']
+  collective = collective_bytes / (chips × link_bw)
+
+cost_analysis numbers from a post-SPMD module are PER-DEVICE; we multiply
+back to global so the formulas above (which divide by chips) are consistent.
+collective_bytes sums the *result* shapes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute in the compiled HLO (per
+device), ×chips for the global figure.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16e9  # v5e
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind from a compiled HLO module."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+_COMP_HDR = re.compile(r"^(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->\s*[^{]*\{|^ENTRY\s+(%?[\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)(?:,|\s)+condition=([%\w.\-]+)(?:,|\s)+body=([%\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and ("{" in line) and ("->" in line or
+                                                           line.startswith("ENTRY")):
+            name = line.split()[0]
+            if name == "ENTRY":
+                name = line.split()[1]
+            cur = name.rstrip("{").strip()
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def collective_bytes_corrected(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective bytes with while-loop trip-count multipliers
+    (XLA cost analysis counts loop bodies once — scans would undercount by
+    n_layers × microbatches)."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].rstrip("{").strip()
+    if entry is None or entry not in comps:
+        return collective_bytes(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        body = comps.get(cond_name, "")
+        consts = [int(x) for x in _CONST_RE.findall(body)]
+        return max(consts) if consts else 1
+
+    totals: Dict[str, float] = {}
+
+    def walk(name: str, mult: float, seen=()):
+        if name not in comps or name in seen:
+            return
+        text = comps[name]
+        for line in text.splitlines():
+            m = _COLL_RE.search(line)
+            if m:
+                kind = m.group(2)
+                totals[kind] = totals.get(kind, 0) + \
+                    _shape_bytes(m.group(1)) * mult
+        for wm in _WHILE_RE.finditer(text):
+            cond, body = wm.group(1), wm.group(2)
+            walk(body, mult * trip_count(cond), seen + (name,))
+
+    walk(entry, 1.0)
+    return {k: int(v) for k, v in totals.items()}
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int], chips: int,
+                   model_flops: float) -> dict:
+    """cost: compiled.cost_analysis() (per-device); coll: per-device
+    collective bytes by kind; model_flops: 6·N·D useful FLOPs (global)."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(sum(coll.values()))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    hlo_flops_global = flops_dev * chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "collective_by_kind": coll,
+        "model_flops": model_flops,
+        "useful_flops_fraction": (model_flops / hlo_flops_global
+                                  if hlo_flops_global else 0.0),
+        # roofline fraction: useful compute time over the achievable step
+        # time (max of the three terms) — the score we hillclimb
+        "roofline_fraction": (
+            (model_flops / (chips * PEAK_FLOPS)) /
+            max(t_compute, t_memory, t_coll, 1e-12)),
+    }
+
+
+def model_flops_for(cfg, shape, mode: str) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode counts one token per seq."""
+    n = cfg.n_active_params() if cfg.moe.n_experts else cfg.n_params()
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: 2·N per token + attention reads (memory-bound; FLOPs small)
+    return 2.0 * n * shape.global_batch

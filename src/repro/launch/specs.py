@@ -1,0 +1,101 @@
+"""Abstract parameter/input construction for the dry-run.
+
+``abstract_params`` traces init under ``jax.eval_shape`` (zero allocation —
+nemotron's 340B params stay abstract) and captures the logical
+PartitionSpecs via a host-side side channel.
+
+``input_specs`` builds ShapeDtypeStruct stand-ins for every model input of a
+given (arch × shape × mode) cell, plus their logical shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWState
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """→ (shape_tree, logical_spec_tree). dtype overrides float param dtype
+    (serving uses bf16)."""
+    captured = {}
+
+    def build(key):
+        params, specs = tf.init_lm(cfg, key)
+        captured["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), shapes)
+    return shapes, captured["specs"]
+
+
+def abstract_opt_state(param_shapes, param_specs, dtype=jnp.float32):
+    m = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), param_shapes)
+    shapes = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                        m=m, v=jax.tree.map(lambda s: s, m))
+    specs = AdamWState(step=P(), m=param_specs,
+                       v=jax.tree.map(lambda s: s, param_specs))
+    return shapes, specs
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """→ (batch_shapes, batch_logical_specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sd((B, S), jnp.int32),
+             "labels": _sd((B, S), jnp.int32)}
+    specs = {"tokens": P("dp", None), "labels": P("dp", None)}
+    if cfg.frontend == "vit_stub":
+        batch["patches"] = _sd((B, cfg.n_frontend_tokens, cfg.d_model),
+                               jnp.bfloat16)
+        specs["patches"] = P("dp", None, None)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = _sd((B, cfg.n_enc_ctx, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = P("dp", None, None)
+    return batch, specs
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    shp = tf.cache_shapes(cfg, batch, max_seq)
+    shapes = jax.tree.map(lambda t: _sd(t[0], t[1]), shp,
+                          is_leaf=tf._is_shape_leaf)
+    specs = jax.tree.map(lambda t: t[2], shp, is_leaf=tf._is_shape_leaf)
+    return shapes, specs
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sd((B, S), jnp.int32)
+    cache_shapes_, cache_specs_ = cache_abstract(cfg, B, S)
+    extra = extra_specs = None
+    if cfg.frontend == "vit_stub":
+        extra = _sd((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        extra_specs = P("dp", None, None)
+    if cfg.frontend == "audio_stub":
+        extra = _sd((B, cfg.n_enc_ctx, cfg.d_model), jnp.bfloat16)
+        extra_specs = P("dp", None, None)
+    return ((tokens, cache_shapes_, extra),
+            (P("dp", None), cache_specs_, extra_specs))
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    token = _sd((B,), jnp.int32)
+    pos = _sd((B,), jnp.int32)
+    cache_shapes_, cache_specs_ = cache_abstract(cfg, B, S)
+    return ((token, pos, cache_shapes_),
+            (P("dp"), P("dp"), cache_specs_))

@@ -1,0 +1,8 @@
+"""Pure-JAX functional model zoo.
+
+Every module exposes ``init_*`` (returns a pytree of ``PV(value, spec)``
+leaves — weight + logical PartitionSpec) and a pure ``apply``-style function.
+``repro.runtime.sharding`` resolves logical specs to mesh-physical
+NamedShardings.
+"""
+from repro.models.layers import PV, split_pv_tree  # noqa: F401

@@ -1,0 +1,185 @@
+"""GQA / MQA / MHA attention with full + sliding-window masking.
+
+Three entry points sharing one weight set:
+  attn_train    — causal self-attention over a full sequence
+  attn_prefill  — same, but also returns the KV cache slab
+  attn_decode   — single-token step against a dense KV cache
+
+The inner product is factored through ``attention_core`` so the runtime can
+swap in the flash-attention Pallas kernel (TPU) or the jnp reference (CPU /
+dry-run lowering) without touching call sites.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import activation_sharding
+from repro.models.layers import (PV, apply_rope, dense_init, rmsnorm,
+                                 softcap, zeros_init)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (H, hd), ("fsdp", "tp", None)),
+        "wk": dense_init(ks[1], d, (KV, hd), ("fsdp", "tp", None)),
+        "wv": dense_init(ks[2], d, (KV, hd), ("fsdp", "tp", None)),
+        "wo": PV(dense_init(ks[3], H * hd, d, (None,), scale=1.0 / (H * hd) ** 0.5).value
+                 .reshape(H, hd, d), P("tp", None, "fsdp")),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = zeros_init((H, hd), ("tp", None))
+        p["bk"] = zeros_init((KV, hd), ("tp", None))
+        p["bv"] = zeros_init((KV, hd), ("tp", None))
+    if cfg.qk_norm:
+        p["q_norm"] = zeros_init((hd,), (None,))
+        p["k_norm"] = zeros_init((hd,), (None,))
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def _causal_mask(q_pos, k_pos, window: int):
+    """mask[..., s, t] True where k-position t is visible from q-position s."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def attention_core(q, k, v, mask, scale: float, attn_softcap: float = 0.0):
+    """q:[B,S,H,hd] k,v:[B,T,KV,hd] mask:[B,1,S,T] or broadcastable.
+
+    GQA is computed flat-head (K/V repeated to H): every assigned arch has
+    KV < 16, so a [B,KV,G,S,T] score layout cannot shard its head dims on
+    tp=16 — the flat [B,H,S,T] layout shards cleanly whenever H % tp == 0
+    (and replication of the *repeated* K/V is local, no collectives).
+    fp32 accumulation, bf16 operands (MXU-native).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    # bf16 matmul + f32 softmax after the cast: an f32-accumulating einsum
+    # here makes every backward cotangent (and thus every SP/FSDP collective
+    # in the layer body) f32 — 2× the bytes. The deployed Pallas flash
+    # kernel accumulates in f32 *inside* the kernel without f32 residents.
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    # hook: shard the query dim of S×T scores (archs with H % tp != 0)
+    scores = activation_sharding.constrain(scores, "scores")
+    scores = softcap(scores, attn_softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v)
+    return out
+
+
+def _out_proj(p, cfg, out):
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+
+
+def attn_train(p, cfg: ModelConfig, x, positions, window: Optional[int] = None):
+    """x: [B,S,D], positions: [B,S] → [B,S,D]. Causal (+optional window)."""
+    w = cfg.window if window is None else window
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    mask = _causal_mask(positions, positions, w)[:, None]  # [B,1,S,T]
+    out = attention_core(q, k, v, mask, cfg.resolved_head_dim ** -0.5,
+                         cfg.attn_softcap)
+    return _out_proj(p, cfg, out)
+
+
+def attn_prefill(p, cfg: ModelConfig, x, positions, window: Optional[int] = None):
+    """Like attn_train but also returns (k,v) cache slabs [B,T,KV,hd]."""
+    w = cfg.window if window is None else window
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    mask = _causal_mask(positions, positions, w)[:, None]
+    out = attention_core(q, k, v, mask, cfg.resolved_head_dim ** -0.5,
+                         cfg.attn_softcap)
+    return _out_proj(p, cfg, out), (k, v)
+
+
+def attn_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos,
+                window: Optional[int] = None):
+    """Single-token decode.
+
+    x: [B,1,D]; cache_{k,v}: [B,T,KV,hd]; pos: [B] current write position.
+    When the cache slab is smaller than the position range (sliding-window
+    archs), it is treated as a RING buffer: slot j holds the most recent
+    position ≡ j (mod T). Returns (y [B,1,D], new_cache_k, new_cache_v).
+    """
+    w = cfg.window if window is None else window
+    B, T = cache_k.shape[0], cache_k.shape[1]
+    ring = bool(w) and T <= w
+    q, k, v = _project_qkv(p, cfg, x)                      # [B,1,·,hd]
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    bidx = jnp.arange(B)
+    slot = (pos % T) if ring else pos
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    if ring:
+        j = jnp.arange(T)[None, :]
+        k_pos = pos[:, None] - ((pos[:, None] - j) % T)    # [B,T]
+        mask = (_causal_mask(pos[:, None], k_pos, w) &
+                (k_pos >= 0)[:, None, :])[:, None]
+    else:
+        k_pos = jnp.arange(T)[None, :]                     # [1,T]
+        mask = _causal_mask(pos[:, None], k_pos, w)[:, None]
+    out = attention_core(q, cache_k, cache_v, mask,
+                         cfg.resolved_head_dim ** -0.5, cfg.attn_softcap)
+    return _out_proj(p, cfg, out), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_kv(p, cfg: ModelConfig, enc_out):
+    """Precompute K,V from encoder output: [B,T,D] → ([B,T,KV,hd] ×2)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def cross_attend(p, cfg: ModelConfig, x, k, v):
+    """Decoder queries against precomputed encoder K/V (no mask, no rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    mask = jnp.ones((1, 1, 1, k.shape[1]), dtype=bool)
+    out = attention_core(q, k, v, mask, cfg.resolved_head_dim ** -0.5)
+    return _out_proj(p, cfg, out)
+
+
+def bidir_attend(p, cfg: ModelConfig, x, positions):
+    """Bidirectional self-attention (whisper encoder). No rope (sinusoid pos
+    already added), no mask."""
+    q, k, v = _project_qkv(p, cfg, x)
+    mask = jnp.ones((1, 1, 1, k.shape[1]), dtype=bool)
+    out = attention_core(q, k, v, mask, cfg.resolved_head_dim ** -0.5)
+    return _out_proj(p, cfg, out)

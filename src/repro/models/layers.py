@@ -1,0 +1,147 @@
+"""Foundational layers: param containers, norms, RoPE, embeddings.
+
+Logical sharding axes used throughout (resolved by runtime.sharding):
+  "fsdp"  — weight-sharded data axes (ZeRO-3 style), maps to ("pod","data")
+  "tp"    — tensor-parallel axis, maps to "model"
+  None    — replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class PV(NamedTuple):
+    """A parameter leaf: value + logical partition spec (PartitionSpec of
+    logical axis names)."""
+    value: Any
+    spec: P
+
+
+def is_pv(x) -> bool:
+    return isinstance(x, PV)
+
+
+def split_pv_tree(tree):
+    """Split a PV-leaf tree into (params, logical_specs) twin trees."""
+    params = jax.tree.map(lambda pv: pv.value, tree, is_leaf=is_pv)
+    specs = jax.tree.map(lambda pv: pv.spec, tree, is_leaf=is_pv)
+    return params, specs
+
+
+def stack_layer_trees(trees):
+    """Stack a list of identical-structure PV trees along a new leading
+    (layer) axis; the new axis is unsharded."""
+    param_trees = []
+    spec_tree = None
+    for t in trees:
+        p, s = split_pv_tree(t)
+        param_trees.append(p)
+        spec_tree = s
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *param_trees)
+    specs = jax.tree.map(lambda s: P(*((None,) + tuple(s))), spec_tree)
+    return params, specs
+
+
+def _truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out, spec, dtype=jnp.float32, scale=None) -> PV:
+    """Fan-in scaled init for a [d_in, *d_out] projection."""
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return PV(_truncated_normal(key, shape, scale, dtype), P(*spec) if not isinstance(spec, P) else spec)
+
+
+def zeros_init(shape, spec, dtype=jnp.float32) -> PV:
+    return PV(jnp.zeros(shape, dtype), P(*spec) if not isinstance(spec, P) else spec)
+
+
+def ones_init(shape, spec, dtype=jnp.float32) -> PV:
+    return PV(jnp.ones(shape, dtype), P(*spec) if not isinstance(spec, P) else spec)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> PV:
+    # vocab on tp (sharded logits/softmax), d on fsdp
+    return PV(_truncated_normal(key, (vocab, d), 1.0, dtype), P("tp", "fsdp"))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(norm_type: str, d: int) -> dict:
+    if norm_type == "rmsnorm":
+        # stored as (scale - 1) so zeros == identity, llama-style
+        return {"w": zeros_init((d,), (None,))}
+    return {"w": ones_init((d,), (None,)), "b": zeros_init((d,), (None,))}
+
+
+def apply_norm(norm_type: str, p: dict, x, eps: float):
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, p["w"], eps)
+    return layernorm(x, p["w"], p["b"], eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_ctx: int, d: int):
+    """Whisper-style fixed sinusoidal embeddings [n_ctx, d]."""
+    pos = jnp.arange(n_ctx, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10000.0) * jnp.arange(d // 2, dtype=jnp.float32)
+                  / max(d // 2 - 1, 1))
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x

@@ -1,0 +1,35 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen), squared-ReLU (nemotron-4),
+GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, squared_relu
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d, ff, ("fsdp", "tp")),
+            "w_up": dense_init(k2, d, ff, ("fsdp", "tp")),
+            "w_down": dense_init(k3, ff, d, ("tp", "fsdp")),
+        }
+    return {
+        "w_up": dense_init(k1, d, ff, ("fsdp", "tp")),
+        "w_down": dense_init(k2, ff, d, ("tp", "fsdp")),
+    }
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = squared_relu(h) if cfg.mlp_type == "squared_relu" else jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

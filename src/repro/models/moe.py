@@ -1,0 +1,148 @@
+"""Mixture-of-Experts block (qwen3-moe, granite-moe).
+
+Dispatch paths:
+
+* ``dense``  — every expert computes every token, masked combine. Exact
+  semantics of a capacity-unbounded top-k MoE; O(E) FLOPs. Tiny smoke
+  configs only.
+* ``gather`` — capacity-bounded **cumsum dispatch** (GShard semantics,
+  no argsort): tokens are grouped (group ≈ one data shard); a running
+  per-expert count assigns each (token, k) a capacity slot; tokens scatter
+  to [E, C, d], experts run as grouped einsums, results scatter-add back.
+  FLOPs ≈ active-params × capacity_factor — what a real deployment pays.
+  Overflow tokens drop (standard GShard).
+
+Sharding (per §Perf hillclimb, see EXPERIMENTS.md):
+  expert weights [E, d, ff] carry P("tp", None, None) — experts shard over
+  the model axis (EP); d/ff stay unsharded (expert weights are small, and
+  sharding the contraction dim forces a partial-sum all-reduce of the full
+  [E,G,C,ff] intermediate — the dominant collective in the baseline).
+  ``pad_experts_to`` rounds E up so EP divides tp=16 (granite: 40→48;
+  padded experts are masked out of routing and receive zero tokens).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import activation_sharding
+from repro.models.layers import PV, dense_init
+
+
+def _padded_experts(cfg: ModelConfig) -> int:
+    E = cfg.moe.n_experts
+    pad = getattr(cfg.moe, "pad_experts_to", 0)
+    return max(E, pad) if pad else E
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    E = _padded_experts(cfg)
+    ff = cfg.moe.d_ff or cfg.d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = 1.0 / d ** 0.5
+    scale_out = 1.0 / ff ** 0.5
+    # §Perf: small-expert archs replicate expert weights (zero MoE
+    # collectives, dp-local dispatch); big-expert archs shard E over tp.
+    e_ax = "tp" if cfg.moe.ep_shard else None
+    return {
+        "router": dense_init(kr, d, E, (None, None), scale=0.02),
+        "w_gate": PV(jax.random.truncated_normal(kg, -2, 2, (E, d, ff),
+                                                 jnp.float32) * scale_in,
+                     P(e_ax, None, None)),
+        "w_up": PV(jax.random.truncated_normal(ku, -2, 2, (E, d, ff),
+                                               jnp.float32) * scale_in,
+                   P(e_ax, None, None)),
+        "w_down": PV(jax.random.truncated_normal(kd, -2, 2, (E, ff, d),
+                                                 jnp.float32) * scale_out,
+                     P(e_ax, None, None)),
+    }
+
+
+def _route(p, cfg: ModelConfig, x):
+    """x: [..., d] → (gates [..., k], experts [..., k], aux_loss scalar)."""
+    E_real, k = cfg.moe.n_experts, cfg.moe.top_k
+    E = p["router"].shape[-1]
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if E != E_real:  # mask padded experts out of routing
+        emask = jnp.arange(E) < E_real
+        logits = jnp.where(emask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)  # norm_topk_prob
+    # Switch-style load-balance aux loss: E·mean_e(frac_tokens_e·mean_prob_e)
+    assign = jax.nn.one_hot(experts, E, dtype=probs.dtype).sum(axis=-2)
+    frac = jnp.mean(assign.reshape(-1, E), axis=0) / k
+    mp = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E_real * jnp.sum(frac * mp)
+    return gates.astype(x.dtype), experts, aux
+
+
+def _dense_moe(p, cfg: ModelConfig, x, gates, experts):
+    """All-experts einsum path (smoke configs)."""
+    E = p["router"].shape[-1]
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("...d,edf->...ef", xf, p["w_gate"].astype(jnp.float32))
+    u = jnp.einsum("...d,edf->...ef", xf, p["w_up"].astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y_all = jnp.einsum("...ef,efd->...ed", h, p["w_down"].astype(jnp.float32))
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.float32)          # [...,k,E]
+    w = jnp.einsum("...k,...ke->...e", gates.astype(jnp.float32), onehot)
+    return jnp.einsum("...ed,...e->...d", y_all, w).astype(x.dtype)
+
+
+def _gather_moe(p, cfg: ModelConfig, x, gates, experts):
+    """Cumsum capacity dispatch (no argsort), per-group flat scatter.
+
+    §Perf iterations 2/3 (2-D EP-sharded buffers; replicated experts) both
+    REFUTED their hypotheses — the per-assignment combine gather crosses EP
+    shards / replicated fp32 masters blow memory. This formulation keeps the
+    iteration-1 flat layout (scatter/gather stay dp-local) and removes the
+    argsort (cumsum rank + scatter-ADD with a zero-masked source makes the
+    overflow row harmless)."""
+    E = p["router"].shape[-1]
+    k = cfg.moe.top_k
+    G, T, d = x.shape
+    C = int(max(1, (T * k * cfg.moe.capacity_factor) //
+                max(cfg.moe.n_experts, 1)))
+
+    def per_group(xg, gg, eg):
+        flat_e = eg.reshape(-1)                              # [T*k]
+        flat_t = jnp.arange(T * k, dtype=jnp.int32) // k
+        flat_g = gg.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [T*k, E]
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        rank = jnp.sum(pos * onehot, axis=-1)                # [T*k]
+        keep = rank < C
+        slot = jnp.where(keep, flat_e * C + rank, 0)         # overflow → 0
+        xsrc = jnp.where(keep[:, None], xg[flat_t], 0)       # masked source
+        xe = jnp.zeros((E * C, d), x.dtype).at[slot].add(xsrc)
+        xe = xe.reshape(E, C, d)
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+        contrib = ye.reshape(E * C, d)[slot] * \
+            (flat_g * keep).astype(x.dtype)[:, None]
+        return jnp.zeros_like(xg).at[flat_t].add(contrib)
+
+    return jax.vmap(per_group)(x, gates, experts)
+
+
+def apply_moe(p, cfg: ModelConfig, x, n_groups: int = 0):
+    """x: [B,S,d] → ([B,S,d], aux loss)."""
+    B, S, d = x.shape
+    gates, experts, aux = _route(p, cfg, x)
+    if cfg.moe.dispatch == "dense":
+        y = _dense_moe(p, cfg, x, gates, experts)
+        return y, aux
+    # group tokens: one group per (pod,data) shard keeps scatters local
+    G = n_groups or max(1, B)
+    xg = x.reshape(G, (B * S) // G, d)
+    gg = gates.reshape(G, (B * S) // G, -1)
+    eg = experts.reshape(G, (B * S) // G, -1)
+    y = _gather_moe(p, cfg, xg, gg, eg).reshape(B, S, d)
+    return y, aux

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin — arXiv:2402.19427).
+
+Block: x → {gate branch: GeLU(W_gate x)} ⊙ {main: conv1d → RG-LRU} → W_out.
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = exp(-c · r_t · softplus(Λ))
+    h_t = a_t h_{t-1} + √(1 - a_t²) · (i_t ⊙ x_t)
+
+Train/prefill uses an associative scan (log-depth on TPU); decode is a single
+fused step. This block is attention-free: no KV cache → the paper's paged-KV
+technique does not apply here (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PV, dense_init, zeros_init
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    ks = jax.random.split(key, 5)
+    # Λ init so that a^c ∈ (0.9, 0.999) roughly — standard Griffin init
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, w)) / cfg.rglru.c))
+    return {
+        "w_main": dense_init(ks[0], d, w, ("fsdp", "tp")),
+        "w_gate": dense_init(ks[1], d, w, ("fsdp", "tp")),
+        "conv_w": PV(jax.random.truncated_normal(
+            ks[2], -2, 2, (cfg.rglru.conv_width, w), jnp.float32) * 0.3,
+            P(None, "tp")),
+        "conv_b": zeros_init((w,), ("tp",)),
+        "wa": dense_init(ks[3], w, w, ("tp", None), scale=1.0 / w ** 0.5),
+        "ba": zeros_init((w,), (None,)),
+        "wx": dense_init(ks[4], w, w, ("tp", None), scale=1.0 / w ** 0.5),
+        "bx": zeros_init((w,), (None,)),
+        "lam": PV(lam.astype(jnp.float32), P("tp")),
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, d, ("tp", "fsdp")),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    return y + b.astype(x.dtype), xp[:, -(W - 1):]
+
+
+def _rglru_coeffs(p, cfg: ModelConfig, u):
+    """u [B,S,w] → (a, b) of the linear recurrence h = a·h_prev + b."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["wx"].astype(jnp.float32)
+                       + p["bx"].astype(jnp.float32))
+    log_a = -cfg.rglru.c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def apply_rglru(p, cfg: ModelConfig, x, h0=None, conv_state=None,
+                decode: bool = False):
+    """x [B,S,D] → (y [B,S,D], (h [B,w], conv_state))."""
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dw->bsw", x, p["w_gate"].astype(x.dtype)).astype(jnp.float32))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_main"].astype(x.dtype))
+    u, conv_state = _conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _rglru_coeffs(p, cfg, u)
+    if decode:
+        h_prev = jnp.zeros_like(b[:, 0]) if h0 is None else h0
+        h = a[:, 0] * h_prev + b[:, 0]
+        hs = h[:, None]
+    else:
+        h_init = jnp.zeros_like(b[:, :1]) if h0 is None else h0[:, None]
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        # fold initial state into the first step's b
+        b = b.at[:, 0].add(a[:, 0] * (0.0 if h0 is None else h0))
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hs[:, -1]
+    y = (hs * gate).astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(x.dtype))
+    return y, (h, conv_state)

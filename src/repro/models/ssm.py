@@ -1,0 +1,184 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD for train/prefill (quadratic within chunks, linear across), and a
+constant-memory recurrent step for decode. Single group (G=1) of B/C shared
+across heads, scalar-per-head A — the mamba2-130m configuration.
+
+Shapes (train):  x [B,S,D] → y [B,S,D]
+State (decode):  h [B,H,P,N]  (H=ssm heads, P=head_dim, N=d_state)
+                 conv [B,W-1,d_conv_channels]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PV, dense_init, ones_init, zeros_init
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.head_dim
+    return d_inner, n_heads, cfg.ssm.d_state
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, H, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N          # x, B, C all pass through the conv
+    ks = jax.random.split(key, 5)
+    dt_bias = jnp.log(jnp.exp(
+        jnp.linspace(cfg.ssm.dt_min, cfg.ssm.dt_max, H)) - 1.0)  # inv softplus
+    return {
+        # in_proj → [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, ("fsdp", "tp")),
+        "conv_w": PV(jax.random.truncated_normal(
+            ks[1], -2, 2, (cfg.ssm.conv_width, conv_ch), jnp.float32) * 0.3,
+            P(None, "tp")),
+        "conv_b": zeros_init((conv_ch,), ("tp",)),
+        "A_log": PV(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)), P("tp")),
+        "dt_bias": PV(dt_bias.astype(jnp.float32), P("tp")),
+        "D": ones_init((H,), ("tp",)),
+        "norm_w": zeros_init((d_inner,), ("tp",)),
+        "w_out": dense_init(ks[2], d_inner, d, ("tp", "fsdp")),
+    }
+
+
+def _split_proj(p, cfg, zxbcdt):
+    d_inner, H, N = ssm_dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv, width W. xBC [B,S,C]; w [W,C].
+
+    Returns (y [B,S,C], new_state [B,W-1,C])."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)                     # [B,S+W-1,C]
+    y = sum(xp[:, i:i + xBC.shape[1]] * w[i].astype(xBC.dtype)
+            for i in range(W))
+    y = jax.nn.silu((y + b.astype(xBC.dtype)).astype(jnp.float32)).astype(xBC.dtype)
+    return y, xp[:, -(W - 1):]
+
+
+def _segsum(x):
+    """x [..., L] → lower-triangular pairwise sums: out[..., i, j] =
+    sum_{j<m<=i} x[m]; -inf above diagonal."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x  [B,S,H,P]  inputs per head
+    dt [B,S,H]    softplus'd timestep
+    A  [H]        negative decay rate
+    Bm [B,S,N], Cm [B,S,N]  (single group broadcast over heads)
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S) if S % chunk else chunk
+    pad = (-S) % L
+    if pad:
+        # zero-dt padding is a no-op on the recurrence (decay=1, input=0)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // L
+    xc = x.reshape(Bsz, nc, L, H, Pd)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    Bc = Bm.reshape(Bsz, nc, L, N)
+    Cc = Cm.reshape(Bsz, nc, L, N)
+
+    dA = dtc * A  # [B,nc,L,H]  (A<0)
+    dA_cum = jnp.cumsum(dA, axis=2)                              # within-chunk
+    # 1) diagonal (intra-chunk) term
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))              # [B,nc,H,L,L]
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)               # [B,nc,L,L]
+    y_diag = jnp.einsum("bclm,bchlm,bcmh,bcmhp->bclhp",
+                        scores, Lmat, dtc, xc)
+    # 2) chunk states: contribution of each chunk to the carried state
+    decay_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)           # [B,nc,L,H]
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Bc, dtc * decay_end, xc)                 # [B,nc,H,P,N]
+    # 3) inter-chunk recurrence h_c = h_{c-1} * exp(sum dA_c) + states_c
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                   # [B,nc,H]
+
+    def scan_fn(h, inp):
+        st, cd = inp
+        h_new = h * cd[..., None, None] + st
+        return h_new, h
+
+    h_init = (jnp.zeros((Bsz, H, Pd, N), x.dtype) if h0 is None
+              else h0.astype(x.dtype))
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                          # [B,nc,H,P,N]
+    # 4) off-diagonal term: prior state read at each position
+    state_decay = jnp.exp(dA_cum)                                # [B,nc,L,H]
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, h_prev, state_decay)
+    y = (y_diag + y_off).reshape(Bsz, S_pad, H, Pd) + D[None, None, :, None] * x
+    return y[:, :S], h_last
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, h):
+    """Single-token recurrence. x [B,H,P]; dt [B,H]; Bm,Cm [B,N]; h [B,H,P,N]."""
+    dA = jnp.exp(dt * A)                                         # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, x)
+    h = h * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + D[None, :, None] * x
+    return y, h
+
+
+def apply_ssm(p, cfg: ModelConfig, x, h0=None, conv_state=None, decode=False):
+    """Full mamba2 block. Train/prefill: x [B,S,D]. Decode: x [B,1,D].
+
+    Returns (y, (h, conv_state))."""
+    d_inner, H, N = ssm_dims(cfg)
+    Pd = cfg.ssm.head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z, xBC, dt = _split_proj(p, cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # [B,S,H]
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xin, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+    Bsz, S = x.shape[0], x.shape[1]
+    xh = xin.reshape(Bsz, S, H, Pd)
+    if decode:
+        y, h = ssd_decode_step(
+            xh[:, 0].astype(jnp.float32), dt[:, 0], A,
+            Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32),
+            p["D"].astype(jnp.float32),
+            (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None
+             else h0.astype(jnp.float32)))
+        y = y[:, None].reshape(Bsz, 1, d_inner).astype(x.dtype)
+    else:
+        y, h = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           p["D"].astype(jnp.float32), cfg.ssm.chunk,
+                           h0=h0)
+        y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    dtp = y.dtype
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf * (1.0 + p["norm_w"].astype(jnp.float32))).astype(dtp)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return y, (h, conv_state)

@@ -1,0 +1,519 @@
+"""Model assembly: decoder-only LMs (dense/MoE/hybrid/SSM), whisper enc-dec,
+VLM with stub frontend. Pure functions over PV param trees.
+
+Layer stacking: layers are grouped into *superblocks* (one period of
+``cfg.block_pattern``); superblocks are stacked and iterated with
+``jax.lax.scan`` so the HLO stays O(1) in depth. Remainder layers (pattern
+not dividing n_layers, e.g. recurrentgemma's 38 = 12×(R,R,A) + R,R) are
+applied explicitly after the scan.
+
+Caches are pytrees aligned with the superblock structure:
+  attn  → {"k": [B,T,KV,hd], "v": [B,T,KV,hd]}
+  rglru → {"h": [B,w], "conv": [B,W-1,w]}
+  ssm   → {"h": [B,H,P,N], "conv": [B,W-1,C]}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import activation_sharding
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (PV, apply_norm, embed_init, init_norm,
+                                 sinusoidal_positions, split_pv_tree,
+                                 stack_layer_trees)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    return cfg.block_pattern or ("attn",)
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "attn":
+        blk = {"norm1": init_norm(cfg.norm_type, cfg.d_model),
+               "attn": attn_mod.init_attention(k1, cfg),
+               "norm2": init_norm(cfg.norm_type, cfg.d_model)}
+        if cfg.moe.n_experts:
+            blk["moe"] = moe_mod.init_moe(k2, cfg)
+        else:
+            blk["mlp"] = mlp_mod.init_mlp(k2, cfg)
+        return blk
+    if kind == "rglru":
+        return {"norm1": init_norm(cfg.norm_type, cfg.d_model),
+                "rglru": rglru_mod.init_rglru(k1, cfg),
+                "norm2": init_norm(cfg.norm_type, cfg.d_model),
+                "mlp": mlp_mod.init_mlp(k2, cfg)}
+    if kind == "ssm":
+        return {"norm1": init_norm(cfg.norm_type, cfg.d_model),
+                "ssm": ssm_mod.init_ssm(k1, cfg)}
+    raise ValueError(kind)
+
+
+def _res_scale(cfg: ModelConfig):
+    if cfg.scale_depth:
+        return cfg.scale_depth / (2.0 * cfg.n_layers) ** 0.5
+    return 1.0
+
+
+def apply_block(p, cfg: ModelConfig, kind: str, x, positions, mode: str,
+                cache=None, pos=None):
+    """mode: train | prefill | decode. Returns (x, new_cache, aux_loss)."""
+    rs = _res_scale(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = apply_norm(cfg.norm_type, p["norm1"], x, cfg.norm_eps)
+    # "inner" hook: under SP the carry is seq-sharded for memory; gather the
+    # activation here (cheap) so TP weights stay sharded inside the block
+    h = activation_sharding.constrain(h, "inner")
+    if kind == "attn":
+        if mode == "train":
+            a = attn_mod.attn_train(p["attn"], cfg, h, positions)
+        elif mode == "prefill":
+            a, (k, v) = attn_mod.attn_prefill(p["attn"], cfg, h, positions)
+            new_cache = {"k": k, "v": v}
+        else:
+            a, ck, cv = attn_mod.attn_decode(
+                p["attn"], cfg, h, cache["k"], cache["v"], pos)
+            new_cache = {"k": ck, "v": cv}
+        x = x + rs * a
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x, cfg.norm_eps)
+        h2 = activation_sharding.constrain(h2, "inner")
+        if "moe" in p:
+            m, aux = moe_mod.apply_moe(p["moe"], cfg, h2)
+        else:
+            m = mlp_mod.apply_mlp(p["mlp"], cfg, h2)
+        return x + rs * m, new_cache, aux
+    if kind == "rglru":
+        h0 = cache["h"] if cache is not None else None
+        cs = cache["conv"] if cache is not None else None
+        r, (hn, csn) = rglru_mod.apply_rglru(
+            p["rglru"], cfg, h, h0=h0, conv_state=cs, decode=(mode == "decode"))
+        if mode != "train":
+            new_cache = {"h": hn, "conv": csn}
+        x = x + rs * r
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x, cfg.norm_eps)
+        h2 = activation_sharding.constrain(h2, "inner")
+        m = mlp_mod.apply_mlp(p["mlp"], cfg, h2)
+        return x + rs * m, new_cache, aux
+    if kind == "ssm":
+        h0 = cache["h"] if cache is not None else None
+        cs = cache["conv"] if cache is not None else None
+        s, (hn, csn) = ssm_mod.apply_ssm(
+            p["ssm"], cfg, h, h0=h0, conv_state=cs, decode=(mode == "decode"))
+        if mode != "train":
+            new_cache = {"h": hn, "conv": csn}
+        return x + rs * s, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# LM init
+# ---------------------------------------------------------------------------
+
+def _superblock_layout(cfg: ModelConfig):
+    pat = _pattern(cfg)
+    n_super = cfg.n_layers // len(pat)
+    rem = tuple(pat[i] for i in range(cfg.n_layers - n_super * len(pat)))
+    return pat, n_super, rem
+
+
+def init_superblock(key, cfg: ModelConfig) -> dict:
+    pat, _, _ = _superblock_layout(cfg)
+    ks = jax.random.split(key, len(pat))
+    return {f"b{i}_{kind}": init_block(ks[i], cfg, kind)
+            for i, kind in enumerate(pat)}
+
+
+def init_lm(cfg: ModelConfig, key) -> Tuple[Any, Any]:
+    """Returns (params, logical_specs) twin trees."""
+    pat, n_super, rem = _superblock_layout(cfg)
+    keys = jax.random.split(key, n_super + len(rem) + 4)
+    tree: Dict[str, Any] = {}
+    tree["embed"] = embed_init(keys[0], cfg.padded_vocab, cfg.d_model)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = embed_init(keys[1], cfg.padded_vocab, cfg.d_model)
+    tree["final_norm"] = init_norm(cfg.norm_type, cfg.d_model)
+    params, specs = split_pv_tree(tree)
+    sb_params, sb_specs = stack_layer_trees(
+        [init_superblock(keys[2 + i], cfg) for i in range(n_super)])
+    params["layers"] = sb_params
+    specs["layers"] = sb_specs
+    for j, kind in enumerate(rem):
+        rp, rsp = split_pv_tree(init_block(keys[2 + n_super + j], cfg, kind))
+        params[f"rem{j}_{kind}"] = rp
+        specs[f"rem{j}_{kind}"] = rsp
+    if cfg.is_enc_dec:
+        ep, es = _init_encoder(cfg, keys[-1])
+        params["encoder"] = ep
+        specs["encoder"] = es
+        cp, cs_ = stack_layer_trees(
+            [ _init_cross_block(jax.random.fold_in(keys[-2], i), cfg)
+              for i in range(cfg.n_layers) ])
+        params["cross"] = cp
+        specs["cross"] = cs_
+    return params, specs
+
+
+def _init_cross_block(key, cfg: ModelConfig) -> dict:
+    return {"norm": init_norm(cfg.norm_type, cfg.d_model),
+            "attn": attn_mod.init_attention(key, cfg, cross=True)}
+
+
+def _init_encoder(cfg: ModelConfig, key):
+    ks = jax.random.split(key, cfg.n_enc_layers + 1)
+    blocks, bspecs = stack_layer_trees(
+        [{"norm1": init_norm(cfg.norm_type, cfg.d_model),
+          "attn": attn_mod.init_attention(ks[i], cfg),
+          "norm2": init_norm(cfg.norm_type, cfg.d_model),
+          "mlp": mlp_mod.init_mlp(jax.random.fold_in(ks[i], 1), cfg)}
+         for i in range(cfg.n_enc_layers)])
+    fp, fs = split_pv_tree({"final_norm": init_norm(cfg.norm_type, cfg.d_model)})
+    return ({"blocks": blocks, **fp}, {"blocks": bspecs, **fs})
+
+
+# ---------------------------------------------------------------------------
+# Remat policy
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    if activation_sharding.enabled("embed_onehot"):
+        # serving path: the table is vocab-sharded (2-D); a row-gather would
+        # replicate it. One-hot contraction reduces over the sharded vocab
+        # instead (tokens-per-step is tiny in decode).
+        oh = jax.nn.one_hot(tokens, params["embed"].shape[0],
+                            dtype=COMPUTE_DTYPE)
+        x = jnp.einsum("...v,vd->...d", oh,
+                       params["embed"].astype(COMPUTE_DTYPE))
+    else:
+        x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    x = activation_sharding.constrain(x, "embed")
+    return x * jnp.asarray(cfg.scale_emb, COMPUTE_DTYPE)
+
+
+def unembed(params, cfg: ModelConfig, x):
+    x = apply_norm(cfg.norm_type, params["final_norm"], x, cfg.norm_eps)
+    table = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    if logits.ndim == 3:
+        logits = activation_sharding.constrain(logits, "logits")
+    if cfg.dim_model_base:
+        logits = logits / (cfg.d_model / cfg.dim_model_base)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:   # mask vocab-padding columns
+        vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(vmask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def _run_blocks(params, cfg: ModelConfig, x, positions, mode: str,
+                cache=None, pos=None):
+    """Scan superblocks, then remainder blocks. Returns (x, new_cache, aux)."""
+    pat, n_super, rem = _superblock_layout(cfg)
+
+    def superblock(carry, xs):
+        x, aux = carry
+        x = activation_sharding.constrain(x)
+        sb_params, sb_cache = xs
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            name = f"b{i}_{kind}"
+            c = None if sb_cache is None else sb_cache.get(name)
+            x, nc, a = apply_block(sb_params[name], cfg, kind, x, positions,
+                                   mode, cache=c, pos=pos)
+            aux = aux + a
+            if nc is not None:
+                new_caches[name] = nc
+        return (x, aux), (new_caches if new_caches else None)
+
+    body = _maybe_remat(superblock, cfg) if mode == "train" else superblock
+    aux0 = jnp.zeros((), jnp.float32)
+    sb_cache_stack = None if cache is None else cache.get("layers")
+    if n_super > 0:
+        if cfg.scan_layers:
+            (x, aux), caches = jax.lax.scan(
+                body, (x, aux0), (params["layers"], sb_cache_stack))
+        else:
+            # unrolled path (train-only; used for perf A/B in §Perf)
+            carry, caches = (x, aux0), None
+            for i in range(n_super):
+                sl = jax.tree.map(lambda a: a[i], params["layers"])
+                cc = (None if sb_cache_stack is None
+                      else jax.tree.map(lambda a: a[i], sb_cache_stack))
+                carry, _ = body(carry, (sl, cc))
+            x, aux = carry
+    else:
+        aux, caches = aux0, None
+    new_cache: Dict[str, Any] = {}
+    if caches is not None:
+        new_cache["layers"] = caches
+    for j, kind in enumerate(rem):
+        name = f"rem{j}_{kind}"
+        c = None if cache is None else cache.get(name)
+        x, nc, a = apply_block(params[name], cfg, kind, x, positions, mode,
+                               cache=c, pos=pos)
+        aux = aux + a
+        if nc is not None:
+            new_cache[name] = nc
+    return x, (new_cache if new_cache else None), aux
+
+
+def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    """tokens [B,S] (+ optional frontend embeds [B,F,D]) → (logits, aux).
+
+    extra_embeds: VLM patch embeddings (prepended) or whisper frame
+    embeddings (encoder input) — the stub modality frontends."""
+    if cfg.is_enc_dec:
+        enc_out = _encode(params, cfg, extra_embeds)
+        x = embed_tokens(params, cfg, tokens)
+        B, S = x.shape[0], x.shape[1]
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.arange(S)[None, :]
+        x, _, aux = _run_blocks_with_cross(params, cfg, x, positions,
+                                           enc_out, "train")
+    else:
+        x = embed_tokens(params, cfg, tokens)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x, _, aux = _run_blocks(params, cfg, x, positions, "train")
+    return unembed(params, cfg, x), aux
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder: frames [B,T,D] (precomputed conv-frontend embeds)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def block(x, bp):
+        h = apply_norm(cfg.norm_type, bp["norm1"], x, cfg.norm_eps)
+        x = x + attn_mod.bidir_attend(bp["attn"], cfg, h, positions)
+        h = apply_norm(cfg.norm_type, bp["norm2"], x, cfg.norm_eps)
+        return x + mlp_mod.apply_mlp(bp["mlp"], cfg, h), None
+
+    x, _ = jax.lax.scan(block, x, params["encoder"]["blocks"])
+    return apply_norm(cfg.norm_type, params["encoder"]["final_norm"], x,
+                      cfg.norm_eps)
+
+
+def _run_blocks_with_cross(params, cfg: ModelConfig, x, positions, enc_out,
+                           mode, cache=None, pos=None):
+    """Whisper decoder: self-attn block + cross-attn per layer (layers NOT
+    scanned together with cross since cross K/V are precomputed per layer)."""
+    # precompute cross K/V for all layers: [L,B,T,KV,hd]
+    if cache is not None and "cross_k" in cache:
+        ck, cv = cache["cross_k"], cache["cross_v"]
+    else:
+        ck, cv = jax.vmap(
+            lambda cp: attn_mod.cross_kv(cp["attn"], cfg, enc_out)
+        )(params["cross"])
+
+    def superblock(carry, xs):
+        x, aux = carry
+        sb_params, cross_p, k, v, sb_cache = xs
+        name = "b0_attn"
+        c = None if sb_cache is None else sb_cache.get(name)
+        x, nc, a = apply_block(sb_params[name], cfg, "attn", x, positions,
+                               mode, cache=c, pos=pos)
+        h = apply_norm(cfg.norm_type, cross_p["norm"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attend(cross_p["attn"], cfg, h, k, v)
+        return (x, aux + a), ({name: nc} if nc is not None else None)
+
+    body = _maybe_remat(superblock, cfg) if mode == "train" else superblock
+    sb_cache_stack = None if cache is None else cache.get("layers")
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], params["cross"], ck, cv, sb_cache_stack))
+    new_cache = None
+    if caches is not None:
+        new_cache = {"layers": caches, "cross_k": ck, "cross_v": cv}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, labels, z_loss: float = 1e-4):
+    """Stable masked CE. labels < 0 are ignored.
+
+    Implemented with iota-select instead of take_along_axis so the vocab dim
+    can stay tp-sharded under SPMD (a gather over a sharded dim triggers
+    involuntary full rematerialization)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    lse = jnp.log(sumexp) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_iota == labels[..., None], shifted, 0.0),
+                     axis=-1)
+    ll = picked + m[..., 0]
+    ce = (lse - ll) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (ce.sum() + zl.sum()) / denom
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: {"tokens": [B,S], "labels": [B,S], optional "frames"/"patches"}."""
+    extra = batch.get("frames", batch.get("patches"))
+    logits, aux = forward_train(params, cfg, batch["tokens"],
+                                extra_embeds=extra)
+    labels = batch["labels"]
+    if extra is not None and not cfg.is_enc_dec:
+        # VLM: frontend tokens prepended — loss only over text positions
+        logits = logits[:, extra.shape[1]:]
+    loss = lm_loss(logits, labels)
+    if cfg.moe.n_experts:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Caches: init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _cache_entry_shapes(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    hd = cfg.resolved_head_dim
+    if kind == "attn":
+        # sliding-window archs only keep a window-sized ring slab
+        T = min(max_seq, cfg.window) if cfg.window else max_seq
+        return {"k": ((batch, T, cfg.n_kv_heads, hd), COMPUTE_DTYPE,
+                      P("dp", "sp", "tp", None)),
+                "v": ((batch, T, cfg.n_kv_heads, hd), COMPUTE_DTYPE,
+                      P("dp", "sp", "tp", None))}
+    if kind == "rglru":
+        w = cfg.rglru.lru_width or cfg.d_model
+        return {"h": ((batch, w), jnp.float32, P("dp", "tp")),
+                "conv": ((batch, cfg.rglru.conv_width - 1, w), COMPUTE_DTYPE,
+                         P("dp", None, "tp"))}
+    if kind == "ssm":
+        d_inner, H, N = ssm_mod.ssm_dims(cfg)
+        conv_ch = d_inner + 2 * N
+        return {"h": ((batch, H, cfg.ssm.head_dim, N), jnp.float32,
+                      P("dp", "tp", None, None)),
+                "conv": ((batch, cfg.ssm.conv_width - 1, conv_ch),
+                         COMPUTE_DTYPE, P("dp", None, "tp"))}
+    raise ValueError(kind)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract cache: pytree of (shape, dtype, logical_spec)."""
+    pat, n_super, rem = _superblock_layout(cfg)
+    out: Dict[str, Any] = {}
+    if n_super:
+        sb = {}
+        for i, kind in enumerate(pat):
+            ent = _cache_entry_shapes(cfg, kind, batch, max_seq)
+            sb[f"b{i}_{kind}"] = {
+                k: ((n_super,) + s, d, P(*((None,) + tuple(sp))))
+                for k, (s, d, sp) in ent.items()}
+        out["layers"] = sb
+    for j, kind in enumerate(rem):
+        out[f"rem{j}_{kind}"] = _cache_entry_shapes(cfg, kind, batch, max_seq)
+    if cfg.is_enc_dec:
+        hd = cfg.resolved_head_dim
+        out["cross_k"] = ((cfg.n_layers, batch, cfg.n_enc_ctx,
+                           cfg.n_kv_heads, hd), COMPUTE_DTYPE,
+                          P(None, "dp", None, "tp", None))
+        out["cross_v"] = out["cross_k"]
+    return out
+
+
+def _is_shape_leaf(x):
+    return isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    shp = cache_shapes(cfg, batch, max_seq)
+    return jax.tree.map(lambda t: jnp.zeros(t[0], t[1]), shp,
+                        is_leaf=_is_shape_leaf)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    shp = cache_shapes(cfg, batch, max_seq)
+    return jax.tree.map(lambda t: t[2], shp, is_leaf=_is_shape_leaf)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, extra_embeds=None):
+    """Run the prompt; write K/V into `cache` slabs (sized max_seq ≥ S).
+
+    Returns (logits_last [B,V], cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    if extra_embeds is not None and not cfg.is_enc_dec:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    if cfg.is_enc_dec:
+        enc_out = _encode(params, cfg, extra_embeds)
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+        x, pcache, _ = _run_blocks_with_cross(params, cfg, x, positions,
+                                              enc_out, "prefill")
+    else:
+        x, pcache, _ = _run_blocks(params, cfg, x, positions, "prefill")
+    # place prefill K/V into the cache slabs (window slabs keep the ring-
+    # aligned tail; S % window == 0 keeps slots position-congruent)
+    def merge(slab, fresh):
+        if slab.ndim == fresh.ndim and slab.ndim >= 4 \
+                and slab.shape[-3] != fresh.shape[-3]:
+            T = slab.shape[-3]
+            Sf = fresh.shape[-3]
+            if Sf > T:          # windowed slab: keep last T positions
+                return jax.lax.slice_in_dim(
+                    fresh, Sf - T, Sf, axis=slab.ndim - 3).astype(slab.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(
+                slab, fresh.astype(slab.dtype), 0, axis=slab.ndim - 3)
+        return fresh.astype(slab.dtype)
+    cache = jax.tree.map(merge, cache, pcache)
+    logits = unembed(params, cfg, x[:, -1:])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache):
+    """token [B] int32, pos [B] int32 → (logits [B,V], cache)."""
+    x = embed_tokens(params, cfg, token[:, None])
+    positions = pos[:, None]
+    if cfg.is_enc_dec:
+        x = x + sinusoidal_positions(cfg.max_seq, cfg.d_model
+                                     ).astype(x.dtype)[pos][:, None]
+        x, cache, _ = _run_blocks_with_cross(params, cfg, x, positions, None,
+                                             "decode", cache=cache, pos=pos)
+    else:
+        x, cache, _ = _run_blocks(params, cfg, x, positions, "decode",
+                                  cache=cache, pos=pos)
+    logits = unembed(params, cfg, x)
+    return logits[:, 0], cache

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding resolution, train/serve step builders,
+fault tolerance."""

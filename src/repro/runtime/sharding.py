@@ -1,0 +1,101 @@
+"""Logical-axis → mesh-axis resolution.
+
+Models annotate params/activations with *logical* axes:
+  "fsdp" — weight sharding over the data-parallel axes (ZeRO-3)
+  "tp"   — tensor parallel (heads / ffn / vocab / experts)
+  "dp"   — batch data parallel
+  "sp"   — sequence parallel (long-context decode caches)
+
+A ``ShardingPolicy`` maps logical names to physical mesh axes. The default
+production policy on mesh (pod, data, model):
+  fsdp → ("pod","data")   tp → "model"   dp → ("pod","data")   sp → "model"
+
+Policies are the unit of perf iteration: §Perf hillclimbs swap policies, not
+model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Logical→physical axis mapping + runtime knobs."""
+    rules: Dict[str, Axis]
+    microbatches: int = 1           # grad-accumulation steps per train step
+    zero_opt_state: bool = True     # shard optimizer state like params (ZeRO)
+    grad_compress_dtype: Optional[str] = "bfloat16"  # DP-reduce compression
+    name: str = "default"
+
+    def resolve(self, spec: P) -> P:
+        out = []
+        for ax in tuple(spec):
+            if ax is None:
+                out.append(None)
+            elif isinstance(ax, str):
+                out.append(self.rules.get(ax, None))
+            else:  # tuple of logical names
+                phys: list = []
+                for a in ax:
+                    r = self.rules.get(a)
+                    if r is None:
+                        continue
+                    phys.extend(r if isinstance(r, tuple) else (r,))
+                out.append(tuple(phys) if phys else None)
+        return P(*out)
+
+    def shard(self, mesh: Mesh, spec: P) -> NamedSharding:
+        return NamedSharding(mesh, self.resolve(spec))
+
+    def tree_shardings(self, mesh: Mesh, spec_tree) -> Any:
+        return jax.tree.map(lambda s: self.shard(mesh, s), spec_tree)
+
+    def tree_specs(self, spec_tree) -> Any:
+        return jax.tree.map(self.resolve, spec_tree)
+
+
+def default_policy(mesh: Mesh, **kw) -> ShardingPolicy:
+    names = mesh.axis_names
+    dp_axes = tuple(a for a in ("pod", "data") if a in names) or None
+    rules = {
+        "fsdp": dp_axes,
+        "dp": dp_axes,
+        "tp": "model" if "model" in names else None,
+        "sp": "model" if "model" in names else None,
+    }
+    return ShardingPolicy(rules=rules, **kw)
+
+
+def single_device_policy(**kw) -> ShardingPolicy:
+    return ShardingPolicy(rules={}, name="single", **kw)
+
+
+def batch_specs(policy: ShardingPolicy, batch_tree_specs) -> Any:
+    return jax.tree.map(policy.resolve, batch_tree_specs)
+
+
+# --- policy variants used by §Perf hillclimbs -------------------------------
+
+def tp_only_policy(mesh: Mesh, **kw) -> ShardingPolicy:
+    """No FSDP: weights replicated over data axes, TP over model."""
+    p = default_policy(mesh, **kw)
+    rules = dict(p.rules)
+    rules["fsdp"] = None
+    return dataclasses.replace(p, rules=rules, name="tp_only")
+
+
+def seq_shard_policy(mesh: Mesh, **kw) -> ShardingPolicy:
+    """Long-context decode: shard cache sequence dim over the data axes
+    (batch too small to occupy them)."""
+    p = default_policy(mesh, **kw)
+    rules = dict(p.rules)
+    rules["sp"] = rules["dp"]       # sequence rides the data axes
+    rules["dp"] = None              # batch=1: replicate
+    return dataclasses.replace(p, rules=rules, name="seq_shard")

@@ -1,0 +1,109 @@
+"""Shared harness for the paper's §3.4 test families.
+
+Each test assembles a small RV64 program with the hext assembler, boots it
+in the simulator (M mode, pc=0), runs a bounded number of ticks, and checks
+architectural state. `run_asm` builds: M-mode prologue (caller-provided),
+and returns the final machine state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hext import csr as C
+from repro.core.hext import machine
+from repro.core.hext.programs import (Asm, Image, MEM_WORDS, P_GUEST, P_KERN,
+                                      G_L0, G_L1, G_L2, S_L0, S_L1, S_L2)
+
+MAX_TICKS = 3000
+
+
+def run_asm(build_fn, ticks=MAX_TICKS, mem_words=MEM_WORDS):
+    """build_fn(asm, img) → assembles at 0x0; returns final state."""
+    a = Asm(0)
+    img = Image(mem_words)
+    build_fn(a, img)
+    img.place_code(0, a.assemble())
+    st = machine.make_state(mem_words)
+    with jax.experimental.enable_x64():
+        st["mem"] = jnp.asarray(img.mem) | st["mem"]
+    st = machine.run_until_done(st, ticks, chunk=min(ticks, 1024))
+    return st
+
+
+def result(st):
+    return int(st["exit_code"])
+
+
+def csr_of(st, idx):
+    return int(st["csrs"][idx])
+
+
+@pytest.fixture
+def mk():
+    return run_asm
+
+
+# -- common asm fragments ------------------------------------------------------
+
+def exit_with(a, reg="a0"):
+    """Store reg to the DONE MMIO (bare M-mode)."""
+    a.li("t6", 0x10000008)
+    a.sd(reg, 0, "t6")
+    lab = f"_spin{a.pc}"
+    a.label(lab)
+    a.j(lab)
+
+
+def build_gstage_identity(img, pages=range(0, 0x20000, 0x1000)):
+    img.link(G_L2, 0, G_L1)
+    img.link(G_L1, 0, G_L0)
+    for p in pages:
+        img.map_page(G_L0, p, p, P_GUEST)
+
+
+def build_vs_identity(img, pages=range(0, 0x20000, 0x1000)):
+    img.link(S_L2, 0, S_L1)
+    img.link(S_L1, 0, S_L0)
+    for p in pages:
+        img.map_page(S_L0, p, p, P_KERN)
+
+
+S_L0B = 0xB000   # second VS L0 table: VA 0x200000+x → GPA x (2MB region 1)
+
+
+def build_vs_split_data(img, va_page=0x205000, gpa_page=0x5000):
+    """Map VA 0x205000 → GPA 0x5000 through a *separate* L0 table so a test
+    can G-unmap just that table page and provoke an implicit (PTE-fetch)
+    guest fault for data accesses while code fetches keep working."""
+    img.link(S_L1, 1, S_L0B)
+    img.map_page(S_L0B, va_page, gpa_page, P_KERN)
+
+
+def enter_vs(a, entry, hedeleg=0, hideleg=0, vsatp=0, medeleg=0):
+    """M-mode fragment: set up H regs and drop to VS at `entry`.
+
+    medeleg defaults to 0 so every exception from the guest lands at the
+    M handler (where the tests capture mcause/mtval/mtval2/mtinst)."""
+    if medeleg:
+        a.li("t0", medeleg)
+        a.csrw(0x302, "t0")               # medeleg
+    a.li("t0", 8 << 60 | (G_L2 >> 12))
+    a.csrw(0x680, "t0")                   # hgatp
+    if hedeleg:
+        a.li("t0", hedeleg)
+        a.csrw(0x602, "t0")
+    if hideleg:
+        a.li("t0", hideleg)
+        a.csrw(0x603, "t0")
+    if vsatp:
+        a.li("t0", vsatp)
+        a.csrw(0x280, "t0")               # vsatp directly from M
+    # mstatus: MPV=1, MPP=S
+    a.li("t0", 1 << 39)
+    a.csrrs(0, 0x300, "t0")
+    a.li("t0", 1 << 11)
+    a.csrrs(0, 0x300, "t0")
+    a.li("t0", entry)
+    a.csrw(0x341, "t0")                   # mepc
+    a.mret()

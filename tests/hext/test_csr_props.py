@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the CSR file invariants (paper §3.1):
+WARL write masks, read-only fields, aliasing coherence, VS swapping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hext import csr as C
+
+u64s = st.integers(0, (1 << 64) - 1)
+
+
+def _csrs():
+    with jax.experimental.enable_x64():
+        return C.init_csrs()
+
+
+def _rw(csrs, addr, value, priv=3, virt=False):
+    with jax.experimental.enable_x64():
+        new, ok, vinst = C.csr_write(
+            csrs, jnp.asarray(addr, jnp.int32),
+            jnp.asarray(value, jnp.uint64),
+            jnp.asarray(priv, jnp.int32), jnp.asarray(virt, bool))
+        return new, bool(ok), bool(vinst)
+
+
+def _rd(csrs, addr, priv=3, virt=False):
+    with jax.experimental.enable_x64():
+        val, ok, vinst = C.csr_read(
+            csrs, jnp.asarray(addr, jnp.int32),
+            jnp.asarray(priv, jnp.int32), jnp.asarray(virt, bool))
+        return int(val), bool(ok), bool(vinst)
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=u64s)
+def test_mideleg_vs_bits_forced_one(v):
+    """Paper: 'new read-only 1-bit fields for VS and guest external
+    interrupts' — writes can never clear them."""
+    new, ok, _ = _rw(_csrs(), 0x303, v)
+    got = int(new[C.R_MIDELEG])
+    assert got & C.HS_INTERRUPTS == C.HS_INTERRUPTS
+    # and only S-interrupt bits are writable
+    assert got & ~(C.HS_INTERRUPTS | C.S_INTERRUPTS) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=u64s)
+def test_hvip_writes_only_vs_bits_and_alias_mip(v):
+    new, ok, _ = _rw(_csrs(), 0x645, v)
+    mip = int(new[C.R_MIP])
+    # only the VS bits can have changed, and hvip reads back == those bits
+    assert mip & ~C.VS_INTERRUPTS == 0
+    rd, _, _ = _rd(new, 0x645)
+    assert rd == mip & C.VS_INTERRUPTS
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=u64s)
+def test_hedeleg_cannot_delegate_guest_faults(v):
+    """hedeleg must never delegate guest-page-faults / ecall-VS to VS."""
+    new, _, _ = _rw(_csrs(), 0x602, v)
+    got = int(new[C.R_HEDELEG])
+    for bit in (C.EXC_IGUEST_PAGE_FAULT, C.EXC_LGUEST_PAGE_FAULT,
+                C.EXC_SGUEST_PAGE_FAULT, C.EXC_VIRTUAL_INSTRUCTION,
+                C.EXC_ECALL_VS, C.EXC_ECALL_M):
+        assert not (got >> bit) & 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(v=u64s)
+def test_vs_swap_sstatus_redirects(v):
+    """With V=1, sstatus writes hit vsstatus; mstatus untouched."""
+    base = _csrs()
+    m_before = int(base[C.R_MSTATUS])
+    new, ok, vinst = _rw(base, 0x100, v, priv=1, virt=True)
+    assert not vinst and ok
+    assert int(new[C.R_MSTATUS]) == m_before
+    assert int(new[C.R_VSSTATUS]) & ~C.SSTATUS_MASK == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(v=u64s)
+def test_vsip_shifted_alias_roundtrip(v):
+    """vsip.SSIP ↔ mip.VSSIP (shifted-by-1 alias), gated by hideleg."""
+    base, _, _ = _rw(_csrs(), 0x603, C.VS_INTERRUPTS)   # hideleg all VS
+    new, ok, _ = _rw(base, 0x244, v, priv=1, virt=False)
+    mip = int(new[C.R_MIP])
+    want_vssip = bool(v & C.IP_SSIP)
+    assert bool(mip & C.IP_VSSIP) == want_vssip
+    rd, _, _ = _rd(new, 0x244)
+    assert bool(rd & C.IP_SSIP) == want_vssip
+
+
+def test_h_csrs_fault_virtual_from_vs():
+    for addr in (0x600, 0x602, 0x603, 0x645, 0x680, 0xE12, 0x200, 0x280):
+        _, ok, vinst = _rd(_csrs(), addr, priv=1, virt=True)
+        assert vinst, hex(addr)
+    # and are fine from HS
+    for addr in (0x600, 0x602, 0x603, 0x645, 0x680):
+        _, ok, vinst = _rd(_csrs(), addr, priv=1, virt=False)
+        assert ok and not vinst, hex(addr)
+
+
+def test_mepc_low_bit_warl():
+    new, _, _ = _rw(_csrs(), 0x341, 0x1003)
+    assert int(new[C.R_MEPC]) == 0x1002       # bit 0 forced clear
+
+
+@settings(max_examples=10, deadline=None)
+@given(v=u64s)
+def test_plain_csr_write_read_roundtrip(v):
+    for addr, idx in ((0x305, C.R_MTVEC), (0x340, C.R_MSCRATCH),
+                      (0x643, C.R_HTVAL), (0x680, C.R_HGATP)):
+        new, ok, _ = _rw(_csrs(), addr, v)
+        assert ok
+        rd, ok2, _ = _rd(new, addr)
+        assert ok2 and rd == int(new[idx])

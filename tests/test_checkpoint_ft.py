@@ -1,0 +1,107 @@
+"""Checkpoint/restore, preemption, elasticity, and supervisor retry tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault_tolerance import (ElasticMeshManager,
+                                           HeartbeatMonitor, TrainSupervisor)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 8)),
+            "opt": {"m": jnp.zeros((8, 8)), "step": jnp.asarray(3)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    t = _tree()
+    ck.save(7, t)
+    assert ck.latest_step() == 7
+    r = ck.restore(7, jax.tree.map(np.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_no_tmp_visible(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, _tree())
+    ck.save(2, _tree(1))
+    names = os.listdir(tmp_path)
+    assert not any(n.endswith(".tmp") for n in names)
+    assert ck.latest_step() == 2
+
+
+def test_manager_keep_n_and_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2,
+                            async_save=False)
+    t = _tree()
+    for step in range(1, 6):
+        mgr.maybe_save(step, jax.tree.map(lambda x: x + step, t))
+    mgr.finalize()
+    state, start = mgr.restore_or_init(lambda: jax.tree.map(np.zeros_like,
+                                                            t))
+    assert start == 5
+    # keep=2 garbage collection
+    kept = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert len(kept) <= 2
+
+
+def test_supervisor_retries_through_injected_failures(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=3,
+                            async_save=False)
+    calls = {"n": 0}
+
+    def step_fn(state, step):
+        calls["n"] += 1
+        if calls["n"] in (3, 7):          # inject two transient faults
+            raise RuntimeError("injected chip failure")
+        state = {"x": state["x"] + 1}
+        mgr.maybe_save(step, state)
+        return state
+
+    def restore_fn():
+        st, sp = mgr.restore_or_init(lambda: {"x": jnp.zeros(())})
+        return st, sp
+
+    sup = TrainSupervisor(step_fn, lambda s, st: mgr.maybe_save(s, st,
+                                                                force=True),
+                          restore_fn, max_retries=3)
+    state, step = sup.run({"x": jnp.zeros(())}, 0, 10)
+    assert step == 10
+    assert len(sup.failures) == 2
+    assert float(state["x"]) > 0
+
+
+def test_elastic_mesh_plan():
+    em = ElasticMeshManager(model_axis=16)
+    plan = em.plan(512, dead_chips=[17, 300])   # two dead chips, 2 groups
+    assert plan["mesh_shape"][1] == 16
+    assert plan["mesh_shape"][0] == 30          # 32 groups - 2
+    assert abs(plan["microbatch_scale"] - 32 / 30) < 1e-9
+
+
+def test_heartbeat_straggler_detection():
+    hm = HeartbeatMonitor(4, straggler_factor=2.0)
+    import time
+    for w in range(4):
+        for _ in range(5):
+            hm.heartbeat(w, step_time=1.0)
+    hm.heartbeat(2, step_time=5.0)              # straggler
+    assert hm.stragglers() == [2]
+
+
+def test_restore_with_resharding_specs(tmp_path):
+    """Checkpoints store logical specs → restoring onto a different device
+    layout is a device_put, not a rewrite."""
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(1, t)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    r = ck.restore(1, t, shardings={"w": sh})
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))

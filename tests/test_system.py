@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims, as executable assertions:
+  1. guest runs produce bit-identical workload results to native runs
+     (functional correctness of the H extension, paper §3.4/§4),
+  2. guest runs execute MORE instructions (paper Fig 5),
+  3. native exceptions are handled at {M,S}; guest exceptions at {M,HS,VS}
+     with VS ≈ native S and extra page faults (paper Figs 6/7),
+  4. training end-to-end: loss falls and checkpoint-resume works,
+  5. serving end-to-end: multi-tenant paged decode with quota isolation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hext import machine, programs
+
+
+@pytest.fixture(scope="module")
+def crc_native_and_guest():
+    wl = programs.CRC32()
+    with jax.experimental.enable_x64():
+        states = [programs.boot_state(wl, guest=False),
+                  programs.boot_state(wl, guest=True)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    batch = machine.batched_run_until_done(batch, 60000, chunk=4096)
+    nat = jax.tree.map(lambda x: x[0], batch)
+    gst = jax.tree.map(lambda x: x[1], batch)
+    return wl, nat, gst
+
+
+def test_guest_matches_native_checksum(crc_native_and_guest):
+    wl, nat, gst = crc_native_and_guest
+    assert bool(nat["done"]) and bool(gst["done"])
+    assert int(nat["exit_code"]) == wl.golden()
+    assert int(gst["exit_code"]) == wl.golden()
+
+
+def test_guest_executes_more_instructions(crc_native_and_guest):
+    _, nat, gst = crc_native_and_guest
+    assert int(gst["instret"]) > int(nat["instret"])      # paper Fig 5
+    assert int(gst["instret_virt"]) > 0                    # ran in VS
+
+
+def test_exception_levels_match_paper_structure(crc_native_and_guest):
+    _, nat, gst = crc_native_and_guest
+    n_exc = nat["exc_by_level"].tolist()
+    g_exc = gst["exc_by_level"].tolist()
+    assert n_exc[2] == 0                      # native never uses VS
+    assert g_exc[1] > 0                       # hypervisor handles G faults
+    assert g_exc[2] >= n_exc[1]               # VS ≈ native S (paper §4.3)
+    assert int(gst["pagefaults"]) > int(nat["pagefaults"])
+
+
+def test_training_loss_falls_and_resume(tmp_path):
+    from repro.launch.train import main as train_main
+    args = ["--arch", "mamba2_130m", "--reduced", "--steps", "20",
+            "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "10", "--log-every", "50"]
+    losses = train_main(args)
+    assert losses[-1] < losses[0]
+    # resume from the step-19 checkpoint: returns immediately-complete run
+    losses2 = train_main(args)
+    assert losses2 is not None
+
+
+def test_serving_multi_tenant_quota():
+    from repro.launch.serve import main as serve_main
+    stats = serve_main(["--arch", "granite_moe_3b_a800m", "--requests", "4",
+                        "--tenants", "2", "--max-new", "3",
+                        "--prompt-len", "8", "--quota-pages", "8"])
+    assert stats["tokens"] > 0
+    assert stats["faults_stage1"] + stats["faults_stage2"] > 0

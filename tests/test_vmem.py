@@ -1,0 +1,152 @@
+"""Property + unit tests for the two-stage KV virtual memory (vmem)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.vmem import allocator as AL
+from repro.core.vmem import kvcache as KC
+from repro.core.vmem import page_table as PT
+
+
+def test_translate_two_stage_composition():
+    t = PT.TwoStageTable.create(2, 2, 8, 16)
+    t = PT.map_stage1(t, 0, 0, 3, 5)
+    t = PT.map_stage2(t, 0, 5, 42)
+    tr = PT.translate(t, 0, 0, 3)
+    assert int(tr.slot) == 42 and not bool(tr.fault)
+
+
+def test_stage1_fault_then_stage2_fault():
+    t = PT.TwoStageTable.create(1, 1, 4, 4)
+    tr = PT.translate(t, 0, 0, 2)
+    assert bool(tr.fault) and int(tr.stage) == 1
+    t = PT.map_stage1(t, 0, 0, 2, 1)
+    tr = PT.translate(t, 0, 0, 2)
+    assert bool(tr.fault) and int(tr.stage) == 2
+
+
+def test_write_permission_enforced():
+    t = PT.TwoStageTable.create(1, 1, 4, 4)
+    t = PT.map_stage1(t, 0, 0, 0, 0, perm=PT.PERM_R)  # read-only (CoW page)
+    t = PT.map_stage2(t, 0, 0, 7)
+    assert not bool(PT.translate(t, 0, 0, 0).fault)
+    assert bool(PT.translate(t, 0, 0, 0, acc_write=True).fault)
+
+
+def test_hfence_invalidates_fused_cache():
+    """translate-after-hfence == fresh walk (paper hfence semantics)."""
+    t = PT.TwoStageTable.create(1, 1, 4, 4)
+    t = PT.map_stage1(t, 0, 0, 0, 1)
+    t = PT.map_stage2(t, 0, 1, 9)
+    t = PT.fill_fused(t, 0, 0, 0)
+    assert int(PT.translate(t, 0, 0, 0).slot) == 9
+    # hypervisor remaps stage 2 WITHOUT hfence → fused cache is stale
+    t = PT.map_stage2(t, 0, 1, 4)
+    assert int(PT.translate(t, 0, 0, 0).slot) == 9      # stale (TLB hit)
+    t = PT.hfence(t, 0)
+    assert int(PT.translate(t, 0, 0, 0).slot) == 4      # fresh walk
+
+
+def test_tenant_cannot_reach_other_tenants_pages():
+    """Isolation: tenant coordinates only index the tenant's own g_table
+    row; identical logical coordinates resolve to disjoint slots."""
+    t = PT.TwoStageTable.create(2, 1, 4, 4)
+    for tenant, slot in ((0, 10), (1, 20)):
+        t = PT.map_stage1(t, tenant, 0, 0, 0)
+        t = PT.map_stage2(t, tenant, 0, slot)
+    assert int(PT.translate(t, 0, 0, 0).slot) == 10
+    assert int(PT.translate(t, 1, 0, 0).slot) == 20
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "free_tenant"]),
+                          st.integers(0, 2)), min_size=1, max_size=40))
+def test_allocator_invariants_hold_under_any_sequence(ops):
+    """Hypothesis: disjointness / coverage / quota / ownership-count
+    invariants hold under arbitrary alloc/free/teardown interleavings."""
+    pool = AL.PagePool.create(16, [6, 6, 6])
+    live = []
+    for op, tenant in ops:
+        if op == "alloc":
+            pool, slot = AL.alloc(pool, tenant)
+            if int(slot) >= 0:
+                live.append(int(slot))
+        elif op == "free" and live:
+            pool = AL.free(pool, live.pop())
+        elif op == "free_tenant":
+            pool = AL.free_tenant(pool, tenant)
+            owner = np.asarray(pool.owner)
+            live = [s for s in live if owner[s] >= 0]
+        inv = AL.check_invariants(pool)
+        assert all(inv.values()), inv
+
+
+def test_quota_rejects_over_allocation():
+    pool = AL.PagePool.create(8, [2, 8])
+    pool, a = AL.alloc(pool, 0)
+    pool, b = AL.alloc(pool, 0)
+    pool, c = AL.alloc(pool, 0)
+    assert int(a) >= 0 and int(b) >= 0 and int(c) == -1  # quota=2 enforced
+    pool, d = AL.alloc(pool, 1)
+    assert int(d) >= 0                                   # other tenant fine
+
+
+def test_paged_kv_write_read_roundtrip():
+    kv = KC.PagedKVCache.create(
+        n_slots=8, page_size=4, n_kv_heads=2, head_dim=8, n_tenants=2,
+        reqs_per_tenant=2, logical_pages=4, tenant_pages=8)
+    kv, ok = KC.ensure_mapped(kv, 0, 0, 0)
+    assert ok
+    k = jnp.ones((2, 8)) * 3
+    v = jnp.ones((2, 8)) * 5
+    kv, fault = KC.write_token(kv, 0, 0, 2, k, v)
+    assert not bool(fault)
+    kk, vv, tr = KC.gather_kv(kv, 0, 0, 1)
+    assert float(kk[2, 0, 0]) == 3 and float(vv[2, 0, 0]) == 5
+
+
+def test_evict_tenant_frees_everything_and_isolates():
+    kv = KC.PagedKVCache.create(
+        n_slots=8, page_size=4, n_kv_heads=2, head_dim=8, n_tenants=2,
+        reqs_per_tenant=1, logical_pages=4, tenant_pages=8)
+    for p in range(3):
+        kv, ok = KC.ensure_mapped(kv, 0, 0, p)
+        assert ok
+    assert int(kv.pool.used[0]) == 3
+    kv = KC.evict_tenant(kv, 0)
+    assert int(kv.pool.used[0]) == 0
+    assert bool(PT.translate(kv.tables, 0, 0, 0, use_fused=False).fault)
+    inv = AL.check_invariants(kv.pool)
+    assert all(inv.values())
+
+
+def test_paged_decode_attention_matches_dense():
+    """Attention through the two-stage translation == dense attention over
+    the same tokens (the serving data plane is exact)."""
+    rng = np.random.RandomState(0)
+    kv = KC.PagedKVCache.create(
+        n_slots=16, page_size=4, n_kv_heads=2, head_dim=8, n_tenants=1,
+        reqs_per_tenant=1, logical_pages=8, tenant_pages=16,
+        dtype=jnp.float32)
+    T = 10
+    ks = rng.randn(T, 2, 8).astype(np.float32)
+    vs = rng.randn(T, 2, 8).astype(np.float32)
+    for t in range(T):
+        page = t // 4
+        kv, ok = KC.ensure_mapped(kv, 0, 0, page)
+        assert ok
+        kv, fault = KC.write_token(kv, 0, 0, t, jnp.asarray(ks[t]),
+                                   jnp.asarray(vs[t]))
+        assert not bool(fault)
+    q = jnp.asarray(rng.randn(4, 8).astype(np.float32))  # H=4, G=2
+    out = KC.paged_decode_attention(kv, 0, 0, q, T, scale=0.35)
+    # dense oracle
+    G = 2
+    qf = np.asarray(q).reshape(2, G, 8)
+    scores = np.einsum("kgh,tkh->kgt", qf, ks) * 0.35
+    w = np.exp(scores - scores.max(-1, keepdims=True))
+    w /= w.sum(-1, keepdims=True)
+    ref = np.einsum("kgt,tkh->kgh", w, vs).reshape(4, 8)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
