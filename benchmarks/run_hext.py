@@ -1,5 +1,5 @@
 """Run all MiBench-like workloads native + guest through the hext simulator
-(batched vmap run — the TPU-native 'many VMs in lockstep' mode) and dump the
+(one `Fleet` — the TPU-native 'many VMs in lockstep' mode) and dump the
 per-workload counters that reproduce paper Figures 4-7.
 
 Usage: PYTHONPATH=src python -m benchmarks.run_hext [--out PATH]
@@ -8,43 +8,38 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.hext import machine, programs
+from repro.core.hext import programs
+from repro.core.hext.sim import Fleet, MASK64
 
 
 def main(out_path: str = "benchmarks/results/hext_runs.json",
          max_ticks: int = 120000, chunk: int = 8192):
     wls = programs.WORKLOADS
     t_start = time.time()
-    results = {}
-    with jax.experimental.enable_x64():
-        # build the batch: [native×9 ; guest×9]
-        states = [programs.boot_state(w, guest=False) for w in wls] + \
-                 [programs.boot_state(w, guest=True) for w in wls]
-        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    # the batch: [native×9 ; guest×9]
+    fleet = Fleet.boot(wls + wls,
+                       guest=[False] * len(wls) + [True] * len(wls))
     t0 = time.time()
-    batch = machine.batched_run_until_done(batch, max_ticks, chunk=chunk)
+    fleet.run(max_ticks, chunk=chunk)
     wall = time.time() - t0
+    counters = fleet.counters()
+    results = {}
     for i, w in enumerate(wls):
-        nat = jax.tree.map(lambda x: x[i], batch)
-        gst = jax.tree.map(lambda x: x[i + len(wls)], batch)
         g = w.golden()
         results[w.name] = {
-            "golden": int(g) & ((1 << 63) - 1),
-            "native": _counters(nat, g),
-            "guest": _counters(gst, g),
+            "golden": int(g) & MASK64,
+            "native": counters[i].to_dict(g),
+            "guest": counters[i + len(wls)].to_dict(g),
         }
     out = {
         "wall_seconds_batched": wall,
         "setup_seconds": t0 - t_start,
         "workloads": results,
     }
-    import os
-    os.makedirs(out_path.rsplit("/", 1)[0], exist_ok=True)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     for name, r in results.items():
@@ -54,20 +49,6 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
               f"{gg['instret']} ({ratio:.2f}x) exc {n['exc_by_level']}→"
               f"{gg['exc_by_level']} pf {n['pagefaults']}→{gg['pagefaults']}")
     return out
-
-
-def _counters(s, golden):
-    return {
-        "ok": bool(int(s["exit_code"]) == golden),
-        "done": bool(s["done"]),
-        "instret": int(s["instret"]),
-        "instret_virt": int(s["instret_virt"]),
-        "ticks": int(s["ticks"]),
-        "exc_by_level": [int(x) for x in s["exc_by_level"]],
-        "int_by_level": [int(x) for x in s["int_by_level"]],
-        "pagefaults": int(s["pagefaults"]),
-        "walks": int(s["walks"]),
-    }
 
 
 if __name__ == "__main__":

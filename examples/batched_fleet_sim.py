@@ -1,43 +1,39 @@
 """The TPU-native 'gem5 pod': simulate a fleet of VMs in lockstep with one
-vmapped step function — the DESIGN.md §2a adaptation, demonstrated.
+vmapped step function — the DESIGN.md §2a adaptation, demonstrated through
+the typed `Fleet` facade (DESIGN.md §3).
 
 All nine MiBench-like workloads run natively AND as guests (18 machines)
-inside a single jitted/vmapped scan; per-machine architectural counters come
-back as batched tensors.
+inside a single jitted run: a `lax.while_loop` over chunked vmapped scans
+that exits on-device as soon as every machine is done.  Per-machine
+architectural counters come back as typed `Counters` records.
+
+Run with the package on the path (see DESIGN.md §5):
 
     PYTHONPATH=src python examples/batched_fleet_sim.py
 """
-import sys
 import time
 
-sys.path.insert(0, "src")
-
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
-from repro.core.hext import machine, programs  # noqa: E402
+from repro.core.hext import programs
+from repro.core.hext.sim import Fleet
 
 
 def main():
     wls = programs.WORKLOADS
-    with jax.experimental.enable_x64():
-        states = [programs.boot_state(w, guest=False) for w in wls] + \
-                 [programs.boot_state(w, guest=True) for w in wls]
-        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-    print(f"fleet: {len(states)} machines, lockstep vmapped simulation")
+    fleet = Fleet.boot(wls + wls, guest=[False] * len(wls) + [True] * len(wls))
+    print(f"fleet: {len(fleet)} machines, lockstep vmapped simulation")
     t0 = time.time()
-    batch = machine.batched_run_until_done(batch, 120000, chunk=8192)
+    fleet.run(120000, chunk=8192)
     wall = time.time() - t0
-    done = batch["done"].tolist()
-    instret = batch["instret"].tolist()
-    total = sum(instret)
-    print(f"all done: {all(done)}   total instructions: {total:,}   "
+    counters = fleet.counters()
+    total = sum(int(c.instret) for c in counters)
+    print(f"all done: {fleet.all_done}   total instructions: {total:,}   "
           f"wall: {wall:.1f}s   ({total/wall:,.0f} instr/s aggregate)")
+    n = len(wls)
     for i, w in enumerate(wls):
-        ok_n = int(batch["exit_code"][i]) == w.golden()
-        ok_g = int(batch["exit_code"][i + len(wls)]) == w.golden()
-        print(f"  {w.name:14s} native_ok={ok_n} guest_ok={ok_g} "
-              f"overhead={instret[i+len(wls)]/max(instret[i],1):.2f}x")
+        nat, gst = counters[i], counters[i + n]
+        print(f"  {w.name:14s} native_ok={nat.ok(w.golden())} "
+              f"guest_ok={gst.ok(w.golden())} "
+              f"overhead={int(gst.instret)/max(int(nat.instret), 1):.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,30 +1,36 @@
 """Quickstart: boot a guest VM under the xvisor-lite hypervisor and compare
 it against native execution — the paper's experiment in 30 lines.
 
+Run with the package on the path (see DESIGN.md §5):
+
     PYTHONPATH=src python examples/quickstart.py [workload]
 """
 import sys
 import time
 
-sys.path.insert(0, "src")
-
-from repro.core.hext import machine, programs  # noqa: E402
+from repro.core.hext import programs
+from repro.core.hext.sim import Fleet
 
 
 def main():
     name = sys.argv[1] if len(sys.argv) > 1 else "crc32"
-    wl = next(w for w in programs.WORKLOADS if w.name == name)
+    by_name = {w.name: w for w in programs.WORKLOADS}
+    if name not in by_name:
+        sys.exit(f"unknown workload {name!r}; "
+                 f"choose from: {', '.join(sorted(by_name))}")
+    wl = by_name[name]
     print(f"workload: {wl.name}   golden checksum: {wl.golden()}")
-    for guest in (False, True):
-        label = "guest (two-stage, xvisor-lite)" if guest else "native"
-        st = programs.boot_state(wl, guest=guest)
-        t0 = time.time()
-        st = machine.run_until_done(st, max_ticks=120000, chunk=8192)
-        ok = int(st["exit_code"]) == wl.golden()
-        exc = st["exc_by_level"].tolist()
-        print(f"{label:34s} checksum_ok={ok}  instret={int(st['instret'])}  "
-              f"exceptions M/HS/VS={exc}  pagefaults={int(st['pagefaults'])}"
-              f"  wall={time.time()-t0:.1f}s")
+    fleet = Fleet.boot([wl, wl], guest=[False, True])
+    t0 = time.time()
+    fleet.run(max_ticks=120000, chunk=8192)
+    wall = time.time() - t0
+    for spec, c in zip(fleet.specs, fleet.counters()):
+        label = ("guest (two-stage, xvisor-lite)" if spec.guest else "native")
+        print(f"{label:34s} checksum_ok={c.ok(wl.golden())}  "
+              f"instret={int(c.instret)}  "
+              f"exceptions M/HS/VS={c.exc_by_level.tolist()}  "
+              f"pagefaults={int(c.pagefaults)}")
+    print(f"fleet wall={wall:.1f}s (both machines in one lockstep run)")
 
 
 if __name__ == "__main__":

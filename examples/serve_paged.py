@@ -7,16 +7,12 @@ guest page faults (stage-1 edit by the tenant, stage-2 allocation by the
 
     PYTHONPATH=src python examples/serve_paged.py
 """
-import sys
+import jax
+import numpy as np
 
-sys.path.insert(0, "src")
-
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.configs import get_config  # noqa: E402
-from repro.models import transformer as tf  # noqa: E402
-from repro.runtime.serve_loop import PagedServer, Request  # noqa: E402
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.runtime.serve_loop import PagedServer, Request
 
 
 def main():

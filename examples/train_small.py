@@ -5,9 +5,7 @@ steps on CPU with checkpointing + auto-resume, and show the loss falling.
 """
 import sys
 
-sys.path.insert(0, "src")
-
-from repro.launch.train import main as train_main  # noqa: E402
+from repro.launch.train import main as train_main
 
 
 if __name__ == "__main__":

@@ -1,1 +1,3 @@
-from repro.core.hext import csr, isa, machine, programs, translate, trap  # noqa: F401
+from repro.core.hext import (csr, isa, machine, programs, sim,  # noqa: F401
+                             translate, trap)
+from repro.core.hext.sim import Counters, Fleet, HartState  # noqa: F401

@@ -16,6 +16,11 @@ Counters (per hart) mirror the paper's Figures:
 64-bit integer state requires x64; call sites must run under
 ``with jax.experimental.enable_x64():`` — ``run``/``batched_run`` do this
 internally around trace+execute.
+
+NOTE: this module is the raw-dict ISA-core layer.  The public simulation
+API is ``repro.core.hext.sim`` (typed ``HartState`` pytree + ``Fleet``
+facade, DESIGN.md §3); ``make_state``/``run_until_done``/
+``batched_run_until_done`` remain as thin deprecation shims over it.
 """
 from __future__ import annotations
 
@@ -169,33 +174,24 @@ def batched_run(states: Dict, n_ticks: int) -> Dict:
         return jax.jit(jax.vmap(one))(states)
 
 
-def run_until_done(state: Dict, max_ticks: int, chunk: int = 4096) -> Dict:
-    """Run in chunks, stopping early once all harts are done (host loop)."""
-    with jax.experimental.enable_x64():
-        def body(s, _):
-            return step(s), None
-        chunk_fn = jax.jit(lambda s: jax.lax.scan(body, s, None,
-                                                  length=chunk)[0])
-        t = 0
-        while t < max_ticks:
-            state = chunk_fn(state)
-            t += chunk
-            if bool(jnp.all(state["done"])):
-                break
-        return state
+def run_until_done(state, max_ticks: int, chunk: int = 4096):
+    """Deprecated shim — prefer ``sim.Fleet`` / ``sim.run_on_device``.
+
+    Delegates to the on-device while-loop engine (early exit without
+    per-chunk host sync); kept so legacy call sites still work.  Accepts a
+    raw dict or a typed ``HartState`` and returns the same representation;
+    the input is never donated, matching the old host loop.
+    """
+    from repro.core.hext import sim
+    out = sim.run_on_device(sim.HartState.from_raw(state), max_ticks, chunk,
+                            donate=False)
+    return out if isinstance(state, sim.HartState) else out.to_raw()
 
 
-def batched_run_until_done(states: Dict, max_ticks: int,
-                           chunk: int = 4096) -> Dict:
-    with jax.experimental.enable_x64():
-        def body(s, _):
-            return step(s), None
-        one = lambda s: jax.lax.scan(body, s, None, length=chunk)[0]
-        chunk_fn = jax.jit(jax.vmap(one))
-        t = 0
-        while t < max_ticks:
-            states = chunk_fn(states)
-            t += chunk
-            if bool(jnp.all(states["done"])):
-                break
-        return states
+def batched_run_until_done(states, max_ticks: int, chunk: int = 4096):
+    """Deprecated shim — prefer ``sim.Fleet.boot(...).run(...)``.
+
+    The engine infers batching from the leading hart dimension, so this is
+    the same code path as :func:`run_until_done`.
+    """
+    return run_until_done(states, max_ticks, chunk)

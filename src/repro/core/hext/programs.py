@@ -1116,11 +1116,7 @@ def build_image(workload: Workload, guest: bool) -> np.ndarray:
 
 
 def boot_state(workload: Workload, guest: bool):
-    """Machine state ready to run (import here to keep numpy-only users)."""
-    import jax
-    import jax.numpy as jnp
-    from repro.core.hext import machine
-    st = machine.make_state(MEM_WORDS)
-    with jax.experimental.enable_x64():
-        st["mem"] = jnp.asarray(build_image(workload, guest))
-    return st
+    """Typed `HartState` ready to run (import here to keep numpy-only
+    users import-light).  Legacy raw-dict consumers: call ``.to_raw()``."""
+    from repro.core.hext.sim import HartState
+    return HartState.boot(workload, guest=guest)

@@ -1,17 +1,14 @@
 """Shared harness for the paper's §3.4 test families.
 
 Each test assembles a small RV64 program with the hext assembler, boots it
-in the simulator (M mode, pc=0), runs a bounded number of ticks, and checks
-architectural state. `run_asm` builds: M-mode prologue (caller-provided),
-and returns the final machine state.
+in the simulator (M mode, pc=0) through the typed `Fleet` facade, runs a
+bounded number of ticks, and checks architectural state. `run_asm` builds:
+M-mode prologue (caller-provided), and returns the final `HartState`.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.hext import csr as C
-from repro.core.hext import machine
+from repro.core.hext.sim import Fleet
 from repro.core.hext.programs import (Asm, Image, MEM_WORDS, P_GUEST, P_KERN,
                                       G_L0, G_L1, G_L2, S_L0, S_L1, S_L2)
 
@@ -19,24 +16,22 @@ MAX_TICKS = 3000
 
 
 def run_asm(build_fn, ticks=MAX_TICKS, mem_words=MEM_WORDS):
-    """build_fn(asm, img) → assembles at 0x0; returns final state."""
+    """build_fn(asm, img) → assembles at 0x0; returns final HartState."""
     a = Asm(0)
     img = Image(mem_words)
     build_fn(a, img)
     img.place_code(0, a.assemble())
-    st = machine.make_state(mem_words)
-    with jax.experimental.enable_x64():
-        st["mem"] = jnp.asarray(img.mem) | st["mem"]
-    st = machine.run_until_done(st, ticks, chunk=min(ticks, 1024))
-    return st
+    fleet = Fleet.from_images([img.mem], mem_words=mem_words)
+    fleet.run(ticks, chunk=min(ticks, 1024))
+    return fleet[0]
 
 
 def result(st):
-    return int(st["exit_code"])
+    return int(st.counters.exit_code)
 
 
 def csr_of(st, idx):
-    return int(st["csrs"][idx])
+    return int(st.csrs[idx])
 
 
 @pytest.fixture

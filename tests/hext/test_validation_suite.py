@@ -12,10 +12,13 @@ from repro.core.hext.programs import (G_L0, G_L1, G_L2, P_GUEST, P_KERN,
                                       S_L0, S_L1, S_L2)
 from tests.hext.conftest import (S_L0B, build_gstage_identity,
                                  build_vs_identity, build_vs_split_data,
-                                 csr_of, enter_vs, exit_with, run_asm)
+                                 csr_of, enter_vs, exit_with, result, run_asm)
 
 SV39 = 8 << 60
 MTVEC = 0x800            # shared M handler location in these tests
+
+# the long §3.4 validation suite — excluded from quick CI via -m "not slow"
+pytestmark = pytest.mark.slow
 
 
 def m_handler_capture(a):
@@ -55,7 +58,7 @@ def test_two_stage_translation_loads_value():
         m_handler_capture(a)
 
     st = run_asm(build, ticks=600)
-    assert int(st["regs"][10]) == MAGIC
+    assert int(st.regs[10]) == MAGIC
 
 
 def test_two_stage_translation_guest_fault_reports_gpa():
@@ -90,10 +93,6 @@ def test_two_stage_translation_guest_fault_reports_gpa():
     assert csr_of(st, C.R_MSTATUS) & C.MSTATUS_GVA
 
 
-def result(st):
-    return int(st["exit_code"])
-
-
 # ---------------------------------------------------------------------------
 # second_stage_only_translation — vsatp BARE, hgatp active
 # ---------------------------------------------------------------------------
@@ -114,7 +113,7 @@ def test_second_stage_only_translation():
         m_handler_capture(a)
 
     st = run_asm(build, ticks=600)
-    assert int(st["regs"][10]) == MAGIC
+    assert int(st.regs[10]) == MAGIC
 
 
 def test_second_stage_only_gstage_fault():
@@ -494,7 +493,7 @@ def test_interrupt_msi_taken_in_m():
 
     st = run_asm(build, ticks=600)
     assert result(st) == (1 << 63) | 3  # MSI cause, interrupt bit set
-    assert int(st["int_by_level"][0]) == 1
+    assert int(st.counters.int_by_level[0]) == 1
 
 
 def test_vssi_injected_and_handled_at_vs():
@@ -531,8 +530,8 @@ def test_vssi_injected_and_handled_at_vs():
 
     st = run_asm(build)
     # vscause = interrupt | 1 (SSI at supervisor encoding)
-    assert int(st["regs"][10]) == (1 << 63) | 1
-    assert int(st["int_by_level"][2]) == 1    # handled at VS
+    assert int(st.regs[10]) == (1 << 63) | 1
+    assert int(st.counters.int_by_level[2]) == 1    # handled at VS
 
 
 def test_interrupt_to_hs_when_not_hideleg():
@@ -567,5 +566,5 @@ def test_interrupt_to_hs_when_not_hideleg():
         m_handler_capture(a)
 
     st = run_asm(build)
-    assert int(st["regs"][10]) == (1 << 63) | 2   # VSSI cause (2) at HS
-    assert int(st["int_by_level"][1]) == 1
+    assert int(st.regs[10]) == (1 << 63) | 2   # VSSI cause (2) at HS
+    assert int(st.counters.int_by_level[1]) == 1

@@ -9,48 +9,41 @@ The headline claims, as executable assertions:
   4. training end-to-end: loss falls and checkpoint-resume works,
   5. serving end-to-end: multi-tenant paged decode with quota isolation.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.core.hext import machine, programs
+from repro.core.hext import programs
+from repro.core.hext.sim import Fleet
 
 
 @pytest.fixture(scope="module")
 def crc_native_and_guest():
     wl = programs.CRC32()
-    with jax.experimental.enable_x64():
-        states = [programs.boot_state(wl, guest=False),
-                  programs.boot_state(wl, guest=True)]
-        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-    batch = machine.batched_run_until_done(batch, 60000, chunk=4096)
-    nat = jax.tree.map(lambda x: x[0], batch)
-    gst = jax.tree.map(lambda x: x[1], batch)
-    return wl, nat, gst
+    fleet = Fleet.boot([wl, wl], guest=[False, True])
+    fleet.run(60000, chunk=4096)
+    return wl, fleet[0].counters, fleet[1].counters
 
 
 def test_guest_matches_native_checksum(crc_native_and_guest):
     wl, nat, gst = crc_native_and_guest
-    assert bool(nat["done"]) and bool(gst["done"])
-    assert int(nat["exit_code"]) == wl.golden()
-    assert int(gst["exit_code"]) == wl.golden()
+    assert bool(nat.done) and bool(gst.done)
+    assert nat.ok(wl.golden())
+    assert gst.ok(wl.golden())
 
 
 def test_guest_executes_more_instructions(crc_native_and_guest):
     _, nat, gst = crc_native_and_guest
-    assert int(gst["instret"]) > int(nat["instret"])      # paper Fig 5
-    assert int(gst["instret_virt"]) > 0                    # ran in VS
+    assert int(gst.instret) > int(nat.instret)             # paper Fig 5
+    assert int(gst.instret_virt) > 0                       # ran in VS
 
 
 def test_exception_levels_match_paper_structure(crc_native_and_guest):
     _, nat, gst = crc_native_and_guest
-    n_exc = nat["exc_by_level"].tolist()
-    g_exc = gst["exc_by_level"].tolist()
+    n_exc = nat.exc_by_level.tolist()
+    g_exc = gst.exc_by_level.tolist()
     assert n_exc[2] == 0                      # native never uses VS
     assert g_exc[1] > 0                       # hypervisor handles G faults
     assert g_exc[2] >= n_exc[1]               # VS ≈ native S (paper §4.3)
-    assert int(gst["pagefaults"]) > int(nat["pagefaults"])
+    assert int(gst.pagefaults) > int(nat.pagefaults)
 
 
 def test_training_loss_falls_and_resume(tmp_path):
