@@ -2,7 +2,13 @@
 (one `Fleet` — the TPU-native 'many VMs in lockstep' mode) and dump the
 per-workload counters that reproduce paper Figures 4-7.
 
+A third column, ``2guest-preempt``, boots every workload twice per hart
+under the preemptive HS scheduler (timer-sliced round-robin, DESIGN.md
+§2c) and reports the virtualization overhead under preemption.
+
 Usage: PYTHONPATH=src python -m benchmarks.run_hext [--out PATH]
+                                                    [--timeslice N]
+                                                    [--no-preempt]
 """
 from __future__ import annotations
 
@@ -16,7 +22,8 @@ from repro.core.hext.sim import Fleet, MASK64
 
 
 def main(out_path: str = "benchmarks/results/hext_runs.json",
-         max_ticks: int = 120000, chunk: int = 8192):
+         max_ticks: int = 120000, chunk: int = 8192,
+         timeslice: int | None = None, preempt: bool = True):
     wls = programs.WORKLOADS
     t_start = time.time()
     # the batch: [native×9 ; guest×9]
@@ -26,16 +33,36 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
     fleet.run(max_ticks, chunk=chunk)
     wall = time.time() - t0
     counters = fleet.counters()
+
+    preempt_report = {}
+    wall_preempt = 0.0
+    if preempt:
+        # third column: each workload × 2 guests per hart, timer round-robin
+        pfleet = Fleet.boot(wls, guests_per_hart=2, timeslice=timeslice)
+        t1 = time.time()
+        pfleet.run(max_ticks, chunk=chunk)
+        wall_preempt = time.time() - t1
+        preempt_report = pfleet.report()
+
     results = {}
     for i, w in enumerate(wls):
         g = w.golden()
-        results[w.name] = {
+        entry = {
             "golden": int(g) & MASK64,
             "native": counters[i].to_dict(g),
             "guest": counters[i + len(wls)].to_dict(g),
         }
+        p = preempt_report.get(f"{w.name}+{w.name}/2guest-preempt")
+        if p is not None:
+            # overhead vs running the two guests back-to-back without
+            # preemption: hart instret / (2 × single-guest instret)
+            p["overhead_vs_2x_guest"] = (
+                p["instret"] / max(2 * entry["guest"]["instret"], 1))
+            entry["2guest-preempt"] = p
+        results[w.name] = entry
     out = {
         "wall_seconds_batched": wall,
+        "wall_seconds_preempt": wall_preempt,
         "setup_seconds": t0 - t_start,
         "workloads": results,
     }
@@ -45,9 +72,15 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
     for name, r in results.items():
         n, gg = r["native"], r["guest"]
         ratio = gg["instret"] / max(n["instret"], 1)
-        print(f"{name:14s} ok={n['ok']}/{gg['ok']} instret {n['instret']}→"
-              f"{gg['instret']} ({ratio:.2f}x) exc {n['exc_by_level']}→"
-              f"{gg['exc_by_level']} pf {n['pagefaults']}→{gg['pagefaults']}")
+        line = (f"{name:14s} ok={n['ok']}/{gg['ok']} instret {n['instret']}→"
+                f"{gg['instret']} ({ratio:.2f}x) exc {n['exc_by_level']}→"
+                f"{gg['exc_by_level']} pf {n['pagefaults']}→{gg['pagefaults']}")
+        p = r.get("2guest-preempt")
+        if p is not None:
+            line += (f" | 2guest ok={p['ok']} irq={p['timer_irqs']} "
+                     f"ctxsw={p['ctx_switches']} "
+                     f"ovh={p['overhead_vs_2x_guest']:.2f}x")
+        print(line)
     return out
 
 
@@ -55,5 +88,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="benchmarks/results/hext_runs.json")
     ap.add_argument("--max-ticks", type=int, default=120000)
+    ap.add_argument("--timeslice", type=int, default=None,
+                    help="preemption interval in ticks "
+                         f"(default {programs.DEFAULT_TIMESLICE})")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="skip the 2guest-preempt column")
     a = ap.parse_args()
-    main(a.out, a.max_ticks)
+    main(a.out, a.max_ticks, timeslice=a.timeslice,
+         preempt=not a.no_preempt)

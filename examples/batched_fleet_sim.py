@@ -35,6 +35,18 @@ def main():
               f"guest_ok={gst.ok(w.golden())} "
               f"overhead={int(gst.instret)/max(int(nat.instret), 1):.2f}x")
 
+    # the multi-tenant column (DESIGN.md §2c): two guests per hart, the HS
+    # scheduler round-robins them on timer interrupts every `timeslice`
+    print("\npreemptive multi-guest fleet (2 VMs per hart, timer-sliced):")
+    pfleet = Fleet.boot(wls, guests_per_hart=2, timeslice=1000)
+    t0 = time.time()
+    pfleet.run(120000, chunk=8192)
+    wall = time.time() - t0
+    for label, e in pfleet.report().items():
+        print(f"  {label:28s} ok={e['ok']} timer_irqs={e['timer_irqs']} "
+              f"ctx_switches={e['ctx_switches']}")
+    print(f"preempt fleet wall: {wall:.1f}s")
+
 
 if __name__ == "__main__":
     main()

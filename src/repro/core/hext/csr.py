@@ -40,7 +40,13 @@ PRV_U, PRV_S, PRV_M = 0, 1, 3
  R_HTVAL, R_HTINST, R_HGATP,
  R_VSSTATUS, R_VSTVEC, R_VSSCRATCH, R_VSEPC, R_VSCAUSE, R_VSTVAL, R_VSATP,
  R_MCOUNTEREN, R_MISA,
- N_CSR) = range(39)
+ R_MTIME, R_MTIMECMP, R_STIMECMP, R_VSTIMECMP,
+ N_CSR) = range(43)
+
+# Timer comparators boot disarmed (all-ones): the virtual CLINT only drives
+# mip bits for a comparator once software writes it, so workloads that never
+# opt in see bit-identical interrupt behavior.
+TIMER_DISARMED = (1 << 64) - 1
 
 # --- architectural CSR addresses ---------------------------------------------
 CSR_ADDR = {
@@ -62,6 +68,9 @@ CSR_ADDR = {
     0x205: R_VSTVEC, 0x240: R_VSSCRATCH, 0x241: R_VSEPC, 0x242: R_VSCAUSE,
     0x243: R_VSTVAL, 0x244: None,  # vsip
     0x280: R_VSATP,
+    # Sstc timers: stimecmp swaps to vstimecmp with V=1 (handled below);
+    # time (0xC01) is a read-only view of mtime.
+    0x14D: None, 0x24D: R_VSTIMECMP, 0xC01: None,
 }
 
 # --- mstatus fields ----------------------------------------------------------
@@ -170,6 +179,8 @@ def init_csrs():
     misa = (2 << 62) | (1 << 7) | (1 << 8) | (1 << 12) | (1 << 18) | (1 << 20)
     c = c.at[R_MISA].set(u64(misa))
     c = c.at[R_MIDELEG].set(u64(MIDELEG_FORCED))  # forced-one VS bits
+    for r in (R_MTIMECMP, R_STIMECMP, R_VSTIMECMP):
+        c = c.at[r].set(u64(TIMER_DISARMED))
     return c
 
 
@@ -233,10 +244,13 @@ def csr_read(csrs, addr, priv, virt):
     hit(0x204, vsie)
     hit(0x244, vsip)
     hit(0x605, u64(0))  # htimedelta: 0
+    hit(0xC01, csrs[R_MTIME])                       # time: RO mtime view
+    hit(0x14D, _sel(virt, csrs[R_VSTIMECMP], csrs[R_STIMECMP]))
 
     for addr_const, idx in CSR_ADDR.items():
         if idx is None or addr_const in (0x100, 0x104, 0x144, 0x604, 0x644,
-                                         0x645, 0x204, 0x244, 0x605):
+                                         0x645, 0x204, 0x244, 0x605, 0xC01,
+                                         0x14D):
             continue
         v = csrs[idx]
         if addr_const in swap:
@@ -324,12 +338,14 @@ def csr_write(csrs, addr, value, priv, virt):
              0x64A: (R_HTINST, full), 0x680: (R_HGATP, full),
              0x205: (R_VSTVEC, full), 0x240: (R_VSSCRATCH, full),
              0x241: (R_VSEPC, ~u64(1)), 0x242: (R_VSCAUSE, full),
-             0x243: (R_VSTVAL, full), 0x280: (R_VSATP, full)}
+             0x243: (R_VSTVAL, full), 0x280: (R_VSATP, full),
+             0x24D: (R_VSTIMECMP, full)}
     for addr_const, (idx, mask) in plain.items():
         case_v(addr_const, wr(csrs, idx, v, mask))
     swap = {0x105: (R_STVEC, R_VSTVEC), 0x140: (R_SSCRATCH, R_VSSCRATCH),
             0x141: (R_SEPC, R_VSEPC), 0x142: (R_SCAUSE, R_VSCAUSE),
-            0x143: (R_STVAL, R_VSTVAL), 0x180: (R_SATP, R_VSATP)}
+            0x143: (R_STVAL, R_VSTVAL), 0x180: (R_SATP, R_VSATP),
+            0x14D: (R_STIMECMP, R_VSTIMECMP)}
     for addr_const, (sidx, vidx) in swap.items():
         mask = ~u64(1) if addr_const == 0x141 else full
         case_v(addr_const,
@@ -339,6 +355,7 @@ def csr_write(csrs, addr, value, priv, virt):
     case_v(0xE12, csrs)
     case_v(0x301, csrs)
     case_v(0x605, csrs)
+    case_v(0xC01, csrs)   # time: RO region → write faults via read_only below
 
     minp = csr_min_priv(a).astype(priv.dtype)
     is_h_csr = minp == 2

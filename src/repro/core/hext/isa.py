@@ -146,9 +146,12 @@ def remu(a, b):
 
 def translate_cached(state, va, acc, force_virt=False, hlvx=False):
     """TLB-first translation; walk + insert on miss. Returns (pa, XResult,
-    walked)."""
+    walked).  Lookups carry the access's privilege context so a hit can
+    never reuse permissions composed under a different priv/SUM/MXR."""
     virt_eff = state["virt"] | jnp.asarray(force_virt, bool)
-    hit, pa_tlb, perm_ok = TLB.lookup(state["tlb"], va, virt_eff, _u(acc))
+    sum_bit, mxr = X.eff_ctx(state["csrs"], virt_eff)
+    hit, pa_tlb, perm_ok = TLB.lookup(state["tlb"], va, virt_eff, _u(acc),
+                                      state["priv"], sum_bit, mxr)
     use_tlb = hit & perm_ok & ~jnp.asarray(hlvx, bool)
     xr = X.translate(state["mem"], state["csrs"], state["priv"],
                      state["virt"], va, acc, force_virt=force_virt,
@@ -162,26 +165,23 @@ def translate_cached(state, va, acc, force_virt=False, hlvx=False):
 def tlb_fill(state, va, xr, force_virt=False):
     """Insert composed translation on successful walk."""
     virt_eff = state["virt"] | jnp.asarray(force_virt, bool)
-    mstatus = state["csrs"][C.R_MSTATUS]
-    vsstatus = state["csrs"][C.R_VSSTATUS]
-    sum_bit = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_SUM)) != 0,
-                        (mstatus & _u(C.MSTATUS_SUM)) != 0)
-    mxr = (mstatus & _u(C.MSTATUS_MXR)) != 0
+    sum_bit, mxr = X.eff_ctx(state["csrs"], virt_eff)
     perm = TLB.compose_perms(xr.leaf_pte, xr.g_leaf_pte, state["priv"],
                              sum_bit, mxr)
     # guest entries are inserted at 4K granularity (composed two-stage leaf);
     # native entries keep their superpage level
     level = jnp.where(virt_eff, jnp.zeros((), jnp.int32), xr.level)
-    new_tlb = TLB.insert(state["tlb"], va, xr.pa, level, perm, virt_eff)
+    new_tlb = TLB.insert(state["tlb"], va, xr.pa, level, perm, virt_eff,
+                         state["priv"], sum_bit, mxr)
     ok = ~xr.fault
     tlb_sel = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_tlb,
                            state["tlb"])
     return tlb_sel
 
 
-def mem_read(mem, pa, size_log2, unsigned):
-    """Aligned read of 1/2/4/8 bytes from word-array memory."""
-    word = mem[(_u(pa) >> _u(3)).astype(jnp.int32) % mem.shape[0]]
+def word_extract(word, pa, size_log2, unsigned):
+    """Read 1/2/4/8 bytes out of an aligned 64-bit word (shared by RAM and
+    the CLINT MMIO registers)."""
     off = (_u(pa) & _u(7)) << _u(3)           # bit offset
     v = word >> off
     nbits = _u(8) << _u(size_log2)
@@ -192,19 +192,32 @@ def mem_read(mem, pa, size_log2, unsigned):
     return jnp.where(unsigned, v, sv)
 
 
-def mem_write(mem, pa, val, size_log2):
-    idx = (_u(pa) >> _u(3)).astype(jnp.int32) % mem.shape[0]
-    word = mem[idx]
+def word_deposit(word, pa, val, size_log2):
+    """Merge a 1/2/4/8-byte store into an aligned 64-bit word."""
     off = (_u(pa) & _u(7)) << _u(3)
     nbits = _u(8) << _u(size_log2)
     mask = jnp.where(nbits >= 64, ~_u(0), (_u(1) << nbits) - _u(1))
-    newword = (word & ~(mask << off)) | ((_u(val) & mask) << off)
-    return mem.at[idx].set(newword)
+    return (word & ~(mask << off)) | ((_u(val) & mask) << off)
+
+
+def mem_read(mem, pa, size_log2, unsigned):
+    """Aligned read of 1/2/4/8 bytes from word-array memory."""
+    word = mem[(_u(pa) >> _u(3)).astype(jnp.int32) % mem.shape[0]]
+    return word_extract(word, pa, size_log2, unsigned)
+
+
+def mem_write(mem, pa, val, size_log2):
+    idx = (_u(pa) >> _u(3)).astype(jnp.int32) % mem.shape[0]
+    return mem.at[idx].set(word_deposit(mem[idx], pa, val, size_log2))
 
 
 # MMIO
 MMIO_CONSOLE = 0x10000000
 MMIO_DONE = 0x10000008
+MMIO_CTXSW = 0x10000010          # hypervisor pokes: ctx_switches counter
+# CLINT-style timer block (classic SiFive layout)
+MMIO_MTIMECMP = 0x10004000
+MMIO_MTIME = 0x1000BFF8
 
 
 # ---------------------------------------------------------------------------
@@ -379,12 +392,27 @@ def execute(state, instr):
     macc = jnp.where(any_store, X.ACC_W, X.ACC_R)
     xr, walked = translate_cached(
         {**s, "csrs": csrs}, addr, macc, force_virt=force_virt, hlvx=hlvx)
-    # MMIO check (physical)
-    is_console = xr.pa == _u(MMIO_CONSOLE)
-    is_done_io = xr.pa == _u(MMIO_DONE)
-    is_mmio = is_console | is_done_io
+    # MMIO check (physical).  Every device register decodes as a whole
+    # 8-byte region (the CLINT ones with size-aware access), so the classic
+    # RV32-style pair of 32-bit stores works and a sub-word access can
+    # never alias into RAM through the modulo-wrapped word index.
+    pa_word = xr.pa & ~_u(7)
+    is_console = pa_word == _u(MMIO_CONSOLE)
+    is_done_io = pa_word == _u(MMIO_DONE)
+    is_ctxsw_io = pa_word == _u(MMIO_CTXSW)
+    is_mtimecmp_io = pa_word == _u(MMIO_MTIMECMP)
+    is_mtime_io = pa_word == _u(MMIO_MTIME)
+    is_mmio = (is_console | is_done_io | is_ctxsw_io | is_mtimecmp_io |
+               is_mtime_io)
 
     ld_val = mem_read(s["mem"], xr.pa, size, uns)
+    # CLINT reads: mtime / mtimecmp come from the timer registers
+    ld_val = jnp.where(is_mtime_io,
+                       word_extract(csrs[C.R_MTIME], xr.pa, size, uns),
+                       ld_val)
+    ld_val = jnp.where(is_mtimecmp_io,
+                       word_extract(csrs[C.R_MTIMECMP], xr.pa, size, uns),
+                       ld_val)
     st_mem = mem_write(s["mem"], xr.pa, rv2, size)
 
     mem_op = (any_load | any_store) & ~hx_vinst & ~hx_illegal
@@ -418,6 +446,17 @@ def execute(state, instr):
                         console)
     done = done | (any_store & mem_ok & is_done_io)
     exit_code = jnp.where(any_store & mem_ok & is_done_io, rv2, exit_code)
+    # CLINT writes: size-aware merges into the timer registers (mtimecmp
+    # arms the M-level comparator; mtime is writable per the CLINT spec)
+    new_csrs = jnp.where(
+        any_store & mem_ok & is_mtimecmp_io,
+        csrs.at[C.R_MTIMECMP].set(
+            word_deposit(csrs[C.R_MTIMECMP], xr.pa, rv2, size)), new_csrs)
+    new_csrs = jnp.where(
+        any_store & mem_ok & is_mtime_io,
+        csrs.at[C.R_MTIME].set(
+            word_deposit(csrs[C.R_MTIME], xr.pa, rv2, size)), new_csrs)
+    ctxsw_poke = any_store & mem_ok & is_ctxsw_io
     new_tlb = jax.tree.map(
         lambda n, o: jnp.where(mem_ok & walked, n, o),
         tlb_fill(s, addr, xr, force_virt=force_virt), new_tlb)
@@ -587,4 +626,6 @@ def execute(state, instr):
     out["console"] = console
     out["done"] = done
     out["exit_code"] = exit_code
+    out["ctx_switches"] = s["ctx_switches"] + \
+        (retired & ctxsw_poke).astype(jnp.int64)
     return out, fault, retired

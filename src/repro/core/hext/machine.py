@@ -12,6 +12,13 @@ Counters (per hart) mirror the paper's Figures:
   pagefaults           — page-fault subset of exceptions
   walks                — page-table walks performed (TLB misses)
   ticks                — Fig 4 (simulation time proxy; deterministic)
+  timer_irqs           — taken timer interrupts (MTI/STI/VSTI)
+  ctx_switches         — guest context switches (hypervisor MMIO pokes)
+
+``step`` also advances the virtual CLINT each tick (``_advance_timers``):
+mtime increments, and each *armed* comparator (mtimecmp, and the Sstc-style
+stimecmp/vstimecmp CSRs) drives its mip bit.  Comparators boot disarmed
+(2^64-1), so workloads that never arm one see identical behavior.
 
 64-bit integer state requires x64; call sites must run under
 ``with jax.experimental.enable_x64():`` — ``run``/``batched_run`` do this
@@ -72,6 +79,8 @@ def _make_state(mem_words: int) -> Dict:
         "pagefaults": jnp.zeros((), jnp.int64),
         "walks": jnp.zeros((), jnp.int64),
         "ticks": jnp.zeros((), jnp.int64),
+        "timer_irqs": jnp.zeros((), jnp.int64),
+        "ctx_switches": jnp.zeros((), jnp.int64),
     }
 
 
@@ -110,12 +119,39 @@ def _invoke(state: Dict, f: isa.Fault, is_int, pc_override=None) -> Dict:
     out[key] = state[key].at[lvl].add(1)
     if not is_int:
         out["pagefaults"] = state["pagefaults"] + is_pf.astype(jnp.int64)
+    else:
+        is_timer = ((f.cause == _u(5)) | (f.cause == _u(6)) |
+                    (f.cause == _u(7)))        # STI / VSTI / MTI
+        out["timer_irqs"] = state["timer_irqs"] + is_timer.astype(jnp.int64)
     return out
 
 
+def _advance_timers(csrs):
+    """CLINT-style virtual time source: mtime advances once per tick; each
+    *armed* comparator (mtimecmp / stimecmp / vstimecmp, Sstc-style) drives
+    its mip bit from the comparison.  Disarmed comparators (the boot value,
+    2^64-1) leave their mip bit fully software-owned — hvip injection and
+    direct mip writes behave exactly as before the timer existed."""
+    mtime = csrs[C.R_MTIME] + _u(1)
+    csrs = csrs.at[C.R_MTIME].set(mtime)
+    mip = csrs[C.R_MIP]
+    for cmp_idx, bit in ((C.R_MTIMECMP, C.IP_MTIP),
+                         (C.R_STIMECMP, C.IP_STIP),
+                         (C.R_VSTIMECMP, C.IP_VSTIP)):
+        cmpv = csrs[cmp_idx]
+        armed = cmpv != _u(C.TIMER_DISARMED)
+        fired = mip | _u(bit)
+        idle = mip & ~_u(bit)
+        mip = jnp.where(armed, jnp.where(mtime >= cmpv, fired, idle), mip)
+    return csrs.at[C.R_MIP].set(mip)
+
+
 def step(state: Dict) -> Dict:
-    s = state
-    frozen = s["done"]
+    frozen = state["done"]
+
+    # ---- 0. virtual CLINT tick (frozen harts keep their old csrs) ----------
+    s = dict(state)
+    s["csrs"] = _advance_timers(state["csrs"])
 
     # ---- 1. CheckInterrupts (paper Fig 2) ----------------------------------
     take, cause = TR.pending_interrupt(s["csrs"], s["priv"], s["virt"])
@@ -147,10 +183,14 @@ def step(state: Dict) -> Dict:
                       is_int=False)
 
     s_run = _sel_state(fault.fault, s_fault, s_exec)
-    # halted harts only wait for interrupts
-    s_norm = _sel_state(s["halted"] & ~take, s, s_run)
+    # halted harts wake on any pending+locally-enabled interrupt — the spec
+    # says WFI resumes on (mip & mie) != 0 regardless of mstatus.MIE/SIE
+    # global gating; `take` additionally routes through the trap path when
+    # the interrupt is actually deliverable at the current privilege.
+    wake = (s["csrs"][C.R_MIP] & s["csrs"][C.R_MIE]) != _u(0)
+    s_norm = _sel_state(s["halted"] & ~take & ~wake, s, s_run)
     out = _sel_state(take, s_int, s_norm)
-    out = _sel_state(frozen, s, out)
+    out = _sel_state(frozen, state, out)
     out["ticks"] = state["ticks"] + (~frozen).astype(jnp.int64)
     return out
 

@@ -305,8 +305,35 @@ G_L2, G_L1, G_L0 = 0x10000, 0x14000, 0x15000
 MEM_WORDS = 1 << 15        # 256 KiB
 
 MMIO_DONE = 0x10000008
+MMIO_CTXSW = 0x10000010
 
 SATP_SV39 = 8 << 60
+
+# ---------------------------------------------------------------------------
+# preemptive 2-guest layout (paper §3.2 cloud scenario: time-sliced VMs).
+# The M/HS region keeps the single-guest map; each guest gets a private
+# 64 KiB host-physical window and a private G-stage table set, and the
+# HS scheduler round-robins between them on timer interrupts.
+# ---------------------------------------------------------------------------
+HS2_HANDLER = 0x0800       # scheduler trap handler (code may run past 0x1000)
+SCHED_CUR = 0x2000         # current guest index (0/1)
+SCHED_CURCTX = 0x2008      # &ctx[cur]
+SCHED_CURGI = 0x2010       # &ginfo[cur]
+GINFO0 = 0x2040            # per-guest {hgatp, g_l0, window, done} blocks
+GINFO_SIZE = 0x40
+GUEST_RES = 0x2100         # per-guest checksum mailboxes (host-readable)
+CTX0 = 0x2200              # per-guest saved context (x1..x31 then CSRs)
+CTX_SIZE = 0x200
+CTX_PC = 0x100             # byte offset of the sepc slot inside a context
+G2_L2 = (0x4000, 0xC000)   # per-guest Sv39x4 roots (16 KiB, 16K-aligned)
+G2_L1 = (0x8000, 0x10000)
+G2_L0 = (0x9000, 0x11000)
+GUEST_WIN = 0x10000        # 64 KiB of guest-physical space per guest
+PB = (0x20000, 0x30000)    # host-physical guest window bases
+DEFAULT_TIMESLICE = 1000   # ticks between preemptions
+
+# saved per guest at CTX_PC + 8*i: sepc (guest pc) then the VS CSR bank
+_VS_CTX_CSRS = (0x141, 0x200, 0x205, 0x240, 0x241, 0x242, 0x243, 0x280)
 
 
 def _build_kernel_pts(img: Image, perms: int):
@@ -461,6 +488,224 @@ def _hypervisor() -> Asm:
     a.sd("a0", 0, "t1")                       # checksum from guest a0
     a.label("hs_spin2")
     a.j("hs_spin2")
+    return a
+
+
+def _scheduler_hypervisor(timeslice: int) -> Asm:
+    """xvisor-lite with a preemptive round-robin scheduler: two guests per
+    hart, time-sliced on the HS timer (stimecmp/STI), VSTI-style injection
+    left to the guests' own vstimecmp.  Each guest owns a host-physical
+    window and a private G-stage table set; on-demand G-stage mapping adds
+    the window offset so both guests see the same guest-physical map."""
+    a = Asm(HS_ENTRY)
+    a.li("t0", HS2_HANDLER)
+    a.csrw(0x105, "t0")                       # stvec (HS)
+    # per-guest info blocks: {hgatp, G-stage L0, window base, done}
+    for i in (0, 1):
+        a.li("t0", GINFO0 + i * GINFO_SIZE)
+        a.li("t1", SATP_SV39 | (G2_L2[i] >> 12))
+        a.sd("t1", 0, "t0")
+        a.li("t1", G2_L0[i])
+        a.sd("t1", 8, "t0")
+        a.li("t1", PB[i])
+        a.sd("t1", 16, "t0")
+        a.sd("zero", 24, "t0")
+    # scheduler state: guest 0 is current
+    a.li("t0", SCHED_CUR)
+    a.sd("zero", 0, "t0")
+    a.li("t1", CTX0)
+    a.sd("t1", 8, "t0")                       # SCHED_CURCTX
+    a.li("t1", GINFO0)
+    a.sd("t1", 16, "t0")                      # SCHED_CURGI
+    # guest 1 first activates at its kernel entry (ctx GPRs/CSRs stay zero)
+    a.li("t0", CTX0 + CTX_SIZE)
+    a.li("t1", KERN_ENTRY)
+    a.sd("t1", CTX_PC, "t0")
+    # hedeleg: guests handle their own VS-stage page faults + ecall-U
+    a.li("t0", (1 << 12) | (1 << 13) | (1 << 15) | (1 << 8))
+    a.csrw(0x602, "t0")
+    a.li("t0", 0x444)
+    a.csrw(0x603, "t0")                       # hideleg: VS interrupts → VS
+    a.li("t0", SATP_SV39 | (G2_L2[0] >> 12))
+    a.csrw(0x680, "t0")                       # hgatp ← guest 0
+    a.hfence_gvma()
+    # arm the scheduler timer: sie.STIE, stimecmp = time + slice (STI stays
+    # at HS — hideleg cannot delegate it — and preempts VS regardless of the
+    # guest's own interrupt enables)
+    a.li("t0", 1 << 5)
+    a.csrrs(0, 0x104, "t0")                   # sie.STIE
+    a.csrr("t0", 0xC01)                       # time
+    a.li("t1", timeslice)
+    a.add("t0", "t0", "t1")
+    a.csrw(0x14D, "t0")                       # stimecmp
+    # enter guest 0
+    a.li("t0", (1 << 7) | (1 << 8))           # hstatus.SPV|SPVP
+    a.csrw(0x600, "t0")
+    a.li("t0", 1 << 8)
+    a.csrrs(0, 0x100, "t0")                   # sstatus.SPP
+    a.li("t0", KERN_ENTRY)
+    a.csrw(0x141, "t0")                       # sepc
+    a.sret()
+
+    assert a.pc <= HS2_HANDLER, hex(a.pc)
+    while a.pc < HS2_HANDLER:
+        a.nop()
+    # ---- scheduler trap handler --------------------------------------------
+    a.label("h2_handler")
+    a.csrw(0x140, "t6")                       # sscratch ← t6 (li scratch)
+    a.li("t6", SCHED_CURCTX)
+    a.ld("t6", 0, "t6")                       # t6 = current guest's ctx
+    a.sd("t0", 8 * 5, "t6")                   # park t0-t2 in their ctx slots
+    a.sd("t1", 8 * 6, "t6")
+    a.sd("t2", 8 * 7, "t6")
+    a.csrr("t0", 0x142)                       # scause
+    a.blt("t0", "zero", "h2_timer")           # interrupt → only STI enabled
+    a.li("t1", 10)
+    a.beq("t0", "t1", "h2_exit")              # ecall from VS → guest done
+    a.li("t1", 21)
+    a.beq("t0", "t1", "h2_map")
+    a.li("t1", 23)
+    a.beq("t0", "t1", "h2_map")
+    a.li("t1", 20)
+    a.beq("t0", "t1", "h2_map")
+    a.li("t1", MMIO_DONE)                     # unexpected → die loudly
+    a.sd("t0", 0, "t1")
+    a.label("h2_spin")
+    a.j("h2_spin")
+
+    # ---- on-demand G-stage mapping (window-offset xvisor-lite page-in) ----
+    a.label("h2_map")
+    a.csrr("t0", 0x643)                       # htval = GPA >> 2
+    a.slli("t0", "t0", 2)                     # GPA
+    # isolation: a GPA outside the guest's 64 KiB window must never be
+    # mapped (it would land in the other guest's window or wrap into HS
+    # memory) — kill the machine with the offending GPA as exit code
+    a.li("t1", GUEST_WIN)
+    a.bltu("t0", "t1", "h2_map_ok")
+    a.li("t1", MMIO_DONE)
+    a.sd("t0", 0, "t1")
+    a.j("h2_spin")
+    a.label("h2_map_ok")
+    a.srli("t1", "t0", 12)
+    a.andi("t1", "t1", 0x1FF)                 # vpn0
+    a.slli("t1", "t1", 3)
+    a.li("t2", SCHED_CURGI)
+    a.ld("t2", 0, "t2")
+    a.ld("t2", 8, "t2")                       # current guest's G-stage L0
+    a.add("t1", "t1", "t2")                   # &PTE
+    a.li("t2", SCHED_CURGI)
+    a.ld("t2", 0, "t2")
+    a.ld("t2", 16, "t2")                      # window base
+    a.add("t0", "t0", "t2")                   # HPA = GPA + window
+    a.srli("t0", "t0", 12)
+    a.slli("t0", "t0", 10)
+    a.ori("t0", "t0", P_GUEST)
+    a.sd("t0", 0, "t1")                       # write G-stage leaf
+    a.hfence_gvma()
+    a.label("h2_ret")                         # restore t0-t2/t6 → guest
+    a.li("t6", SCHED_CURCTX)
+    a.ld("t6", 0, "t6")
+    a.ld("t0", 8 * 5, "t6")
+    a.ld("t1", 8 * 6, "t6")
+    a.ld("t2", 8 * 7, "t6")
+    a.csrr("t6", 0x140)
+    a.sret()
+
+    # ---- timer tick: round-robin preemption --------------------------------
+    a.label("h2_timer")
+    a.li("t0", SCHED_CUR)
+    a.ld("t0", 0, "t0")
+    a.li("t1", 1)
+    a.sub("t0", "t1", "t0")                   # other = 1 - cur
+    a.slli("t1", "t0", 6)
+    a.li("t2", GINFO0)
+    a.add("t1", "t1", "t2")
+    a.ld("t1", 24, "t1")                      # ginfo[other].done
+    a.beqz("t1", "h2_save_switch")
+    a.csrr("t0", 0xC01)                       # other finished: re-arm only
+    a.li("t1", timeslice)
+    a.add("t0", "t0", "t1")
+    a.csrw(0x14D, "t0")
+    a.j("h2_ret")
+
+    a.label("h2_save_switch")                 # save the full guest context
+    a.li("t6", SCHED_CURCTX)
+    a.ld("t6", 0, "t6")
+    for r in range(1, 31):
+        if r in (5, 6, 7):                    # t0-t2 already parked
+            continue
+        a.sd(f"x{r}", 8 * r, "t6")
+    a.csrr("t0", 0x140)                       # original t6
+    a.sd("t0", 8 * 31, "t6")
+    for i, csr in enumerate(_VS_CTX_CSRS):    # sepc + VS CSR bank
+        a.csrr("t0", csr)
+        a.sd("t0", CTX_PC + 8 * i, "t6")
+
+    a.label("h2_make_other_current")          # (also the exit-handoff path)
+    a.li("t0", SCHED_CUR)
+    a.ld("t1", 0, "t0")
+    a.li("t2", 1)
+    a.sub("t1", "t2", "t1")                   # other
+    a.sd("t1", 0, "t0")                       # cur ← other
+    a.slli("t2", "t1", 9)                     # × CTX_SIZE
+    a.li("t3", CTX0)
+    a.add("t2", "t2", "t3")
+    a.sd("t2", 8, "t0")                       # SCHED_CURCTX
+    a.slli("t3", "t1", 6)                     # × GINFO_SIZE
+    a.li("t4", GINFO0)
+    a.add("t3", "t3", "t4")
+    a.sd("t3", 16, "t0")                      # SCHED_CURGI
+    a.ld("t4", 0, "t3")
+    a.csrw(0x680, "t4")                       # hgatp ← other's root
+    a.hfence_gvma()
+    a.mv("t6", "t2")                          # t6 = other's ctx
+    for i, csr in enumerate(_VS_CTX_CSRS):
+        a.ld("t0", CTX_PC + 8 * i, "t6")
+        a.csrw(csr, "t0")
+    a.li("t0", MMIO_CTXSW)                    # count the context switch
+    a.sd("zero", 0, "t0")
+    a.csrr("t0", 0xC01)                       # re-arm the slice
+    a.li("t1", timeslice)
+    a.add("t0", "t0", "t1")
+    a.csrw(0x14D, "t0")
+    a.li("t0", (1 << 7) | (1 << 8))
+    a.csrrs(0, 0x600, "t0")                   # hstatus.SPV|SPVP
+    a.li("t0", 1 << 8)
+    a.csrrs(0, 0x100, "t0")                   # sstatus.SPP
+    for r in range(1, 31):
+        a.ld(f"x{r}", 8 * r, "t6")
+    a.ld("x31", 8 * 31, "t6")                 # ctx base restored last
+    a.sret()
+
+    # ---- guest exit: record checksum, hand off or shut down ---------------
+    a.label("h2_exit")
+    a.li("t0", SCHED_CUR)
+    a.ld("t1", 0, "t0")                       # cur
+    a.slli("t2", "t1", 3)
+    a.li("t0", GUEST_RES)
+    a.add("t2", "t2", "t0")
+    a.sd("a0", 0, "t2")                       # mailbox[cur] ← checksum
+    a.slli("t2", "t1", 6)
+    a.li("t0", GINFO0)
+    a.add("t2", "t2", "t0")
+    a.li("t0", 1)
+    a.sd("t0", 24, "t2")                      # ginfo[cur].done = 1
+    a.li("t0", 1)
+    a.sub("t1", "t0", "t1")                   # other
+    a.slli("t2", "t1", 6)
+    a.li("t0", GINFO0)
+    a.add("t2", "t2", "t0")
+    a.ld("t0", 24, "t2")
+    a.beqz("t0", "h2_make_other_current")     # other still live → hand off
+    a.li("t0", GUEST_RES)                     # both done: combined checksum
+    a.ld("t1", 0, "t0")
+    a.ld("t2", 8, "t0")
+    a.add("t1", "t1", "t2")
+    a.li("t0", MMIO_DONE)
+    a.sd("t1", 0, "t0")
+    a.label("h2_spin2")
+    a.j("h2_spin2")
+    assert a.pc <= SCHED_CUR, hex(a.pc)
     return a
 
 
@@ -1112,6 +1357,61 @@ def build_image(workload: Workload, guest: bool) -> np.ndarray:
     _build_kernel_pts(img, P_KERN)
     if guest:
         _build_gstage_pts(img)
+    return img.mem
+
+
+class _GuestWindow:
+    """Image view that places guest-physical content at a host-physical
+    window: writes are offset by the window base, while PTE contents keep
+    guest-physical ppns (the G-stage adds the offset at run time)."""
+
+    def __init__(self, img: Image, base: int):
+        self.img, self.base = img, base
+
+    def store64(self, addr: int, val: int):
+        self.img.store64(self.base + addr, val)
+
+    def store_bytes(self, addr: int, data: bytes):
+        self.img.store_bytes(self.base + addr, data)
+
+    def place_code(self, base: int, words32: np.ndarray):
+        self.img.place_code(self.base + base, words32)
+
+    def pte(self, pa: int, perms: int) -> int:
+        return self.img.pte(pa, perms)            # GPA ppn, no offset
+
+    def map_page(self, l0_base: int, va: int, pa: int, perms: int):
+        vpn0 = (va >> 12) & 0x1FF
+        self.store64(l0_base + vpn0 * 8, self.pte(pa, perms))
+
+    def link(self, table_base: int, idx: int, child_pa: int):
+        self.store64(table_base + idx * 8, self.pte(child_pa, PTE_V))
+
+
+def build_image_2guest(wl_a: Workload, wl_b: Workload,
+                       timeslice: int = DEFAULT_TIMESLICE) -> np.ndarray:
+    """Bootable image running TWO guest VMs per hart under the preemptive
+    scheduler: M firmware → HS scheduler-hypervisor → {VS guest A, VS guest
+    B} round-robin on timer interrupts.  Each guest gets the standard guest
+    system image (kernel + workload + VS-stage tables) inside its own
+    host-physical window, and a private demand-populated G-stage set."""
+    img = Image(MEM_WORDS)
+    img.place_code(M_BOOT, _m_firmware(native=False).assemble())
+    img.place_code(HS_ENTRY, _scheduler_hypervisor(timeslice).assemble())
+    for i, wl in enumerate((wl_a, wl_b)):
+        win = _GuestWindow(img, PB[i])
+        kern = _kernel(native=False)
+        w = Asm(WORKLOAD)
+        wl.asm(w)
+        kern.labels["workload_entry"] = WORKLOAD
+        win.place_code(KERN_ENTRY, kern.assemble())
+        win.place_code(WORKLOAD, w.assemble())
+        wl.write_data(win)
+        _build_kernel_pts(win, P_KERN)
+        # G-stage skeleton: non-leaf links only — every leaf is mapped on
+        # demand by the scheduler, with the window offset applied
+        img.link(G2_L2[i], 0, G2_L1[i])
+        img.link(G2_L1[i], 0, G2_L0[i])
     return img.mem
 
 

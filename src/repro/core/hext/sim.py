@@ -69,7 +69,7 @@ def checksum_ok(exit_code, golden: int) -> bool:
     jax.tree_util.register_dataclass,
     data_fields=["done", "exit_code", "instret", "instret_virt",
                  "exc_by_level", "int_by_level", "pagefaults", "walks",
-                 "ticks"],
+                 "ticks", "timer_irqs", "ctx_switches"],
     meta_fields=[])
 @dataclasses.dataclass(frozen=True)
 class Counters:
@@ -78,6 +78,7 @@ class Counters:
     instret / instret_virt — Fig 5 (instructions w/ and w/o VM)
     exc_by_level[3] / int_by_level[3] — Figs 6/7 (M, HS, VS)
     pagefaults, walks — translation activity; ticks — Fig 4 time proxy
+    timer_irqs / ctx_switches — preemption activity (DESIGN.md §2c)
     done / exit_code — run outcome (checksum mailbox)
     """
 
@@ -90,6 +91,8 @@ class Counters:
     pagefaults: jax.Array
     walks: jax.Array
     ticks: jax.Array
+    timer_irqs: jax.Array
+    ctx_switches: jax.Array
 
     @classmethod
     def zero(cls) -> "Counters":
@@ -103,6 +106,8 @@ class Counters:
             pagefaults=jnp.zeros((), jnp.int64),
             walks=jnp.zeros((), jnp.int64),
             ticks=jnp.zeros((), jnp.int64),
+            timer_irqs=jnp.zeros((), jnp.int64),
+            ctx_switches=jnp.zeros((), jnp.int64),
         )
 
     def ok(self, golden: int) -> bool:
@@ -121,6 +126,8 @@ class Counters:
                 "int_by_level": [int(x) for x in self.int_by_level],
                 "pagefaults": int(self.pagefaults),
                 "walks": int(self.walks),
+                "timer_irqs": int(self.timer_irqs),
+                "ctx_switches": int(self.ctx_switches),
             }
             if golden is not None:
                 out["ok"] = self.ok(golden)
@@ -129,7 +136,7 @@ class Counters:
 
 _COUNTER_KEYS = ("done", "exit_code", "instret", "instret_virt",
                  "exc_by_level", "int_by_level", "pagefaults", "walks",
-                 "ticks")
+                 "ticks", "timer_irqs", "ctx_switches")
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +181,21 @@ class HartState:
         (native M→S stack, or M→HS xvisor-lite→VS when ``guest``)."""
         from repro.core.hext import programs
         image = programs.build_image(workload, guest)
+        with _x64():
+            st = cls.fresh(programs.MEM_WORDS)
+            return st.with_mem(jnp.asarray(image))
+
+    @classmethod
+    def boot_preemptive(cls, workload_a, workload_b,
+                        timeslice: Optional[int] = None) -> "HartState":
+        """State with a 2-guest preemptive system image loaded: M firmware →
+        HS scheduler-hypervisor → two VS guests round-robined on timer
+        interrupts every `timeslice` ticks (DESIGN.md §2c)."""
+        from repro.core.hext import programs
+        ts = programs.DEFAULT_TIMESLICE if timeslice is None else \
+            int(timeslice)
+        image = programs.build_image_2guest(workload_a, workload_b,
+                                            timeslice=ts)
         with _x64():
             st = cls.fresh(programs.MEM_WORDS)
             return st.with_mem(jnp.asarray(image))
@@ -294,13 +316,24 @@ def run_on_device(state: HartState, max_ticks: int, chunk: int = 4096,
 
 @dataclasses.dataclass(frozen=True)
 class HartSpec:
-    """What one fleet slot is running (for labels and golden checks)."""
+    """What one fleet slot is running (for labels and golden checks).
+
+    A preemptive 2-guest slot carries both workloads (``workload`` is guest
+    A, ``workload_b`` guest B) and the scheduler timeslice."""
     workload: Optional[Any]
     guest: bool
     name: str
+    workload_b: Optional[Any] = None
+    timeslice: int = 0
+
+    @property
+    def preemptive(self) -> bool:
+        return self.workload_b is not None
 
     @property
     def label(self) -> str:
+        if self.preemptive:
+            return f"{self.name}/2guest-preempt"
         return f"{self.name}/{'guest' if self.guest else 'native'}"
 
 
@@ -324,16 +357,46 @@ class Fleet:
     # -- construction -------------------------------------------------------
     @classmethod
     def boot(cls, workloads, guest: Union[bool, Sequence[bool]] = False,
-             ) -> "Fleet":
+             guests_per_hart: int = 1,
+             timeslice: Optional[int] = None) -> "Fleet":
         """Assemble + batch bootable machines, one per workload.
 
         ``workloads`` is a Workload or a sequence of them; ``guest`` is a
         bool applied fleet-wide or a per-slot sequence (e.g.
         ``Fleet.boot(wls * 2, guest=[False] * 9 + [True] * 9)`` is the
         paper's native-vs-VM matrix).
+
+        ``guests_per_hart=2`` boots the preemptive multi-guest images
+        instead: each slot runs TWO guest VMs under the HS scheduler,
+        round-robin every ``timeslice`` ticks.  A slot entry may be a
+        single workload (both guests run it) or an ``(a, b)`` pair.
         """
         wls = list(workloads) if isinstance(workloads, (list, tuple)) \
             else [workloads]
+        if guests_per_hart == 2:
+            if guest is not False:
+                raise ValueError(
+                    "guest= does not apply with guests_per_hart=2 "
+                    "(every slot runs two VS guests)")
+            from repro.core.hext import programs
+            ts = programs.DEFAULT_TIMESLICE if timeslice is None else \
+                int(timeslice)
+            pairs = []
+            for i, w in enumerate(wls):
+                pair = tuple(w) if isinstance(w, (tuple, list)) else (w, w)
+                if len(pair) != 2:
+                    raise ValueError(
+                        f"slot {i}: expected a workload or an (a, b) pair, "
+                        f"got {len(pair)} entries")
+                pairs.append(pair)
+            specs = [HartSpec(a, True, f"{a.name}+{b.name}", workload_b=b,
+                              timeslice=ts) for a, b in pairs]
+            states = [HartState.boot_preemptive(a, b, timeslice=ts)
+                      for a, b in pairs]
+            return cls(cls._stack(states), specs)
+        if guests_per_hart != 1:
+            raise ValueError(f"guests_per_hart must be 1 or 2, "
+                             f"got {guests_per_hart}")
         guests = list(guest) if isinstance(guest, (list, tuple)) \
             else [bool(guest)] * len(wls)
         if len(guests) != len(wls):
@@ -408,6 +471,29 @@ class Fleet:
             return [jax.tree.map(lambda x: x[i], self._harts.counters)
                     for i in range(len(self))]
 
+    def _preempt_entry(self, i: int, spec: HartSpec,
+                       c: Counters) -> Dict[str, Any]:
+        """Report entry for a 2-guest slot: per-guest checksum mailboxes are
+        read straight from the hart's memory (the HS scheduler records each
+        guest's result before combining them into the exit code)."""
+        from repro.core.hext import programs
+        with _x64():
+            res_w = programs.GUEST_RES // 8
+            ck_a = int(self._harts.mem[i, res_w]) & MASK64
+            ck_b = int(self._harts.mem[i, res_w + 1]) & MASK64
+        ga = int(spec.workload.golden()) & MASK64
+        gb = int(spec.workload_b.golden()) & MASK64
+        entry = c.to_dict()
+        entry.update({
+            "golden": (ga + gb) & MASK64,
+            "checksum_a": ck_a, "checksum_b": ck_b,
+            "ok_a": ck_a == ga, "ok_b": ck_b == gb,
+            "ok": bool(c.done) and ck_a == ga and ck_b == gb
+                  and c.ok(ga + gb),
+            "timeslice": spec.timeslice,
+        })
+        return entry
+
     def report(self) -> Dict[str, Dict[str, Any]]:
         """``{label: counter-dict}`` with golden checks where known.
 
@@ -415,11 +501,14 @@ class Fleet:
         hart's counters are silently dropped."""
         out: Dict[str, Dict[str, Any]] = {}
         for i, (spec, c) in enumerate(zip(self._specs, self.counters())):
-            golden = spec.workload.golden() if spec.workload is not None \
-                else None
-            entry = c.to_dict(golden)
-            if golden is not None:
-                entry["golden"] = int(golden) & MASK64
+            if spec.preemptive:
+                entry = self._preempt_entry(i, spec, c)
+            else:
+                golden = spec.workload.golden() if spec.workload is not None \
+                    else None
+                entry = c.to_dict(golden)
+                if golden is not None:
+                    entry["golden"] = int(golden) & MASK64
             label = spec.label
             if label in out:
                 label = f"{label}#{i}"

@@ -7,6 +7,11 @@ different permissions than the supervisor's PFN. Entries created in
 virtualization mode are tagged ``guest`` so that ``hfence.{vvma,gvma}``
 invalidates only them while ``sfence.vma`` touches only native entries.
 Megapage/gigapage leaves insert with their level so neighbours hit too.
+
+Entries additionally carry the privilege context (priv/SUM/MXR) their
+permission bits were composed under; a lookup from a different context
+misses instead of reusing a stale permission verdict (e.g. a U-mode access
+hitting an S-mode entry).
 """
 from __future__ import annotations
 
@@ -32,6 +37,12 @@ def init_tlb():
         "level": jnp.zeros((N_TLB,), jnp.int32),
         "perm": jnp.zeros((N_TLB,), jnp.int32),
         "guest": jnp.zeros((N_TLB,), bool),
+        # privilege context the cached perms were composed under — a lookup
+        # from a different (priv, SUM, MXR) must miss, otherwise e.g. a
+        # U-mode access could reuse an S-mode entry's permission verdict
+        "priv": jnp.zeros((N_TLB,), jnp.int32),
+        "sum": jnp.zeros((N_TLB,), bool),
+        "mxr": jnp.zeros((N_TLB,), bool),
         "valid": jnp.zeros((N_TLB,), bool),
         "ptr": jnp.zeros((), jnp.int32),
     }
@@ -42,11 +53,14 @@ def _vpn_mask(level):
     return ~((_u(1) << (level.astype(U64) * _u(9))) - _u(1))
 
 
-def lookup(tlb, va, virt, acc):
-    """→ (hit, pa, perm_ok)."""
+def lookup(tlb, va, virt, acc, priv, sum_bit, mxr):
+    """→ (hit, pa, perm_ok).  Matches only entries whose cached permission
+    context (priv/SUM/MXR at insert time) equals the current access's."""
     vpn = jnp.asarray(va, U64) >> _u(12)
     lm = _vpn_mask(tlb["level"])
     match = tlb["valid"] & (tlb["guest"] == virt) & \
+        (tlb["priv"] == priv) & (tlb["sum"] == sum_bit) & \
+        (tlb["mxr"] == mxr) & \
         ((vpn & lm) == (tlb["vpn"] & lm))
     hit = jnp.any(match)
     idx = jnp.argmax(match)
@@ -77,7 +91,7 @@ def compose_perms(vs_pte, g_pte, priv, sum_bit, mxr):
     return bits
 
 
-def insert(tlb, va, pa, level, perm, virt):
+def insert(tlb, va, pa, level, perm, virt, priv, sum_bit, mxr):
     i = tlb["ptr"] % N_TLB
     t = dict(tlb)
     t["vpn"] = tlb["vpn"].at[i].set(jnp.asarray(va, U64) >> _u(12))
@@ -85,6 +99,9 @@ def insert(tlb, va, pa, level, perm, virt):
     t["level"] = tlb["level"].at[i].set(level)
     t["perm"] = tlb["perm"].at[i].set(perm)
     t["guest"] = tlb["guest"].at[i].set(virt)
+    t["priv"] = tlb["priv"].at[i].set(priv)
+    t["sum"] = tlb["sum"].at[i].set(sum_bit)
+    t["mxr"] = tlb["mxr"].at[i].set(mxr)
     t["valid"] = tlb["valid"].at[i].set(True)
     t["ptr"] = tlb["ptr"] + 1
     return t

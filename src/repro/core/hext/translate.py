@@ -126,13 +126,16 @@ def _walk(mem, root_pa, vpn2_bits, va, acc, priv, sum_bit, mxr, require_u,
             pte_pa, g_fault, g_cause = pte_addr, jnp.zeros((), bool), _u(0)
         pte = _read64(mem, pte_pa)
         valid = (pte & _u(PTE_V)) != 0
+        # W=1,R=0 encodings are reserved in Sv39/Sv39x4 and must page-fault
+        # (previously such a PTE fell through as a non-leaf pointer)
+        reserved = ((pte & _u(PTE_W)) != 0) & ((pte & _u(PTE_R)) == 0)
         is_leaf = (pte & _u(PTE_R | PTE_X)) != 0
         ppn = (pte >> _u(10)) & _u((1 << 44) - 1)
         # superpage alignment: low ppn bits must be zero at level>0
         align_ok = (ppn & _u((1 << (9 * level)) - 1)) == 0 if level else \
             jnp.ones((), bool)
         perm_ok = _leaf_ok(pte, acc, priv, sum_bit, mxr, require_u)
-        this_fault_pte = ~valid
+        this_fault_pte = ~valid | reserved
         leaf_fault = is_leaf & (~align_ok | ~perm_ok)
         level_fault = jnp.where(g_fault, True, this_fault_pte | leaf_fault)
         level_cause = jnp.where(g_fault, g_cause, _pf_cause(cause_acc, guest))
@@ -181,6 +184,19 @@ def g_translate(mem, hgatp, gpa, acc, mxr, cause_acc=None):
                    level=jnp.where(bare, jnp.zeros((), jnp.int32), lvl))
 
 
+def eff_ctx(csrs, virt_eff):
+    """Effective (SUM, MXR) for an access: vsstatus supplies both when the
+    access is virtualized, mstatus otherwise.  Shared by the walker and the
+    TLB so cached permissions always match what a fresh walk would check."""
+    mstatus = csrs[C.R_MSTATUS]
+    vsstatus = csrs[C.R_VSSTATUS]
+    sum_bit = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_SUM)) != 0,
+                        (mstatus & _u(C.MSTATUS_SUM)) != 0)
+    mxr = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_MXR)) != 0,
+                    (mstatus & _u(C.MSTATUS_MXR)) != 0)
+    return sum_bit, mxr
+
+
 def translate(mem, csrs, priv, virt, va, acc, force_virt=False,
               hlvx=False, mprv_sum=None):
     """Full translation honoring privilege & virtualization mode.
@@ -190,14 +206,9 @@ def translate(mem, csrs, priv, virt, va, acc, force_virt=False,
     instead of read (HLVX).
     Returns XResult."""
     va = _u(va)
-    mstatus = csrs[C.R_MSTATUS]
-    vsstatus = csrs[C.R_VSSTATUS]
     virt_eff = jnp.asarray(virt, bool) | jnp.asarray(force_virt, bool)
     # effective privilege for the access
-    s_bit = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_SUM)) != 0,
-                      (mstatus & _u(C.MSTATUS_SUM)) != 0)
-    mxr = jnp.where(virt_eff, (vsstatus & _u(C.MSTATUS_MXR)) != 0,
-                    (mstatus & _u(C.MSTATUS_MXR)) != 0)
+    s_bit, mxr = eff_ctx(csrs, virt_eff)
     if mprv_sum is not None:
         s_bit = mprv_sum
     acc_eff = jnp.where(jnp.asarray(hlvx, bool), _u(ACC_X), _u(acc))
@@ -217,8 +228,9 @@ def translate(mem, csrs, priv, virt, va, acc, force_virt=False,
     # --- first stage (VS or S), PTE fetches G-translated when virtual ------
     def pte_xlate(gpa, a):
         # implicit VS-stage PTE fetch: needs R at G-stage, but a fault is
-        # reported with the ORIGINAL access type (spec §hypervisor)
-        return g_translate(mem, hgatp_eff, gpa, a, mxr, cause_acc=acc_eff)
+        # reported with the ORIGINAL access type (spec §hypervisor) — raw
+        # `acc`, not acc_eff: an hlvx walk fault is still a LOAD guest fault
+        return g_translate(mem, hgatp_eff, gpa, a, mxr, cause_acc=_u(acc))
 
     pa1, fault1, cause1, tval2_1, implicit1, vs_pte, vs_level = _walk(
         mem, root, 9, va, acc_eff, priv, s_bit, mxr,
@@ -228,7 +240,10 @@ def translate(mem, csrs, priv, virt, va, acc, force_virt=False,
     stage1_fault = ~no_paging & fault1
 
     # --- second stage on the final GPA -------------------------------------
-    g = g_translate(mem, hgatp_eff, gpa_out, _u(acc), mxr)
+    # HLVX carries its execute-permission override through the G-stage too
+    # (acc_eff, not raw acc), while fault causes still report the original
+    # access type — an X-only G-stage page must satisfy an hlvx read.
+    g = g_translate(mem, hgatp_eff, gpa_out, acc_eff, mxr, cause_acc=_u(acc))
     pa = g.pa
     g_fault = ~stage1_fault & g.fault
 

@@ -41,6 +41,25 @@ def mk():
 
 # -- common asm fragments ------------------------------------------------------
 
+MTVEC = 0x800            # shared M handler location in these tests
+
+
+def prologue(a):
+    a.li("t0", MTVEC)
+    a.csrw(0x305, "t0")
+
+
+def m_handler_capture(a):
+    """M handler at MTVEC: exits with mcause (tests read other CSRs from
+    final state)."""
+    assert a.pc <= MTVEC, hex(a.pc)
+    while a.pc < MTVEC:
+        a.nop()
+    a.label("mh")
+    a.csrr("t0", 0x342)
+    exit_with(a, "t0")
+
+
 def exit_with(a, reg="a0"):
     """Store reg to the DONE MMIO (bare M-mode)."""
     a.li("t6", 0x10000008)

@@ -1,0 +1,315 @@
+"""End-to-end tests for the virtual timer & interrupt-injection subsystem
+(ISSUE 2 tentpole) plus the interrupt/TLB conformance regressions:
+
+* WFI wake-on-pending regression (deadlocked before the fix),
+* CLINT-style mtime/mtimecmp MMIO driving MTI at M,
+* a guest arming its own timer via the stimecmp→vstimecmp swap, with the
+  resulting VSTI delegated to VS,
+* stale-TLB cross-privilege regression (U reusing an S entry),
+* HLVX through an X-only G-stage page (asm-level counterpart of the unit
+  test),
+* the preemptive 2-guest scheduler: golden checks, timer_irqs,
+  ctx_switches, and disarmed-timer counter parity.
+"""
+import pytest
+
+from repro.core.hext import csr as C
+from repro.core.hext import isa
+from repro.core.hext import programs
+from repro.core.hext.programs import (G_L0, P_GUEST, S_L0, S_L2)
+from repro.core.hext.sim import Fleet
+from tests.hext.conftest import (build_gstage_identity, build_vs_identity,
+                                 csr_of, enter_vs, exit_with,
+                                 m_handler_capture, prologue, result, run_asm)
+
+SV39 = 8 << 60
+
+pytestmark = pytest.mark.slow
+
+
+# ---------------------------------------------------------------------------
+# WFI wakeup regression — deadlocked the fleet before the fix
+# ---------------------------------------------------------------------------
+
+def test_wfi_wakes_on_pending_but_globally_masked_interrupt():
+    """wfi must resume on (mip & mie) != 0 even with mstatus.MIE clear.
+    The interrupt becomes pending only *after* the hart halts (armed CLINT
+    comparator), so before the fix this hart slept until max_ticks."""
+    def build(a, img):
+        prologue(a)
+        a.li("t0", C.IP_MTIP)
+        a.csrw(0x304, "t0")                  # mie.MTIE (locally enabled)
+        a.li("t0", 60)
+        a.li("t1", isa.MMIO_MTIMECMP)
+        a.sd("t0", 0, "t1")                  # arm CLINT comparator
+        a.wfi()                              # halt; MTIP pends at tick 60
+        a.li("a0", 77)
+        exit_with(a, "a0")
+        m_handler_capture(a)
+
+    st = run_asm(build, ticks=600)
+    assert result(st) == 77                  # woke and continued past wfi
+    # the interrupt was never *taken* (mstatus.MIE=0) — wake only
+    assert st.counters.int_by_level.tolist() == [0, 0, 0]
+    assert int(st.counters.timer_irqs) == 0
+
+
+def test_mti_taken_at_m_via_clint():
+    def build(a, img):
+        prologue(a)
+        a.li("t0", C.IP_MTIP)
+        a.csrw(0x304, "t0")                  # mie.MTIE
+        a.li("t0", C.MSTATUS_MIE)
+        a.csrrs(0, 0x300, "t0")              # global enable
+        a.li("t0", 40)
+        a.li("t1", isa.MMIO_MTIMECMP)
+        a.sd("t0", 0, "t1")                  # arm: fires at tick 40
+        a.label("idle")
+        a.j("idle")
+        m_handler_capture(a)
+
+    st = run_asm(build, ticks=600)
+    assert result(st) == (1 << 63) | 7       # MTI cause
+    assert int(st.counters.int_by_level[0]) == 1
+    assert int(st.counters.timer_irqs) == 1
+
+
+def test_clint_split_32bit_mtimecmp_write():
+    """The classic RV32-style CLINT sequence (two sw's) must arm the
+    comparator correctly, and the upper-half store must hit the MMIO
+    register — not wrap through the modulo word index into RAM."""
+    CANARY = 0xFEEDF00D0000DEAD
+
+    def build(a, img):
+        img.store64(0x4000, CANARY)          # where a wrapped store lands
+        prologue(a)
+        a.li("t0", C.IP_MTIP)
+        a.csrw(0x304, "t0")
+        a.li("t0", C.MSTATUS_MIE)
+        a.csrrs(0, 0x300, "t0")
+        a.li("t1", isa.MMIO_MTIMECMP)
+        a.li("t0", 40)
+        a.sw("t0", 0, "t1")                  # low word
+        a.sw("zero", 4, "t1")                # high word → cmp = 40, armed
+        a.label("idle2")
+        a.j("idle2")
+        m_handler_capture(a)
+
+    st = run_asm(build, ticks=600)
+    assert result(st) == (1 << 63) | 7       # MTI fired
+    assert int(st.counters.timer_irqs) == 1
+    assert int(st.mem[0x4000 // 8]) == CANARY   # RAM untouched
+
+
+def test_time_csr_and_clint_mtime_agree():
+    def build(a, img):
+        prologue(a)
+        a.csrr("t0", 0xC01)                  # time CSR
+        a.li("t1", isa.MMIO_MTIME)
+        a.ld("t1", 0, "t1")                  # CLINT mtime load
+        a.sub("a0", "t1", "t0")              # load is 2 instrs later
+        exit_with(a, "a0")
+        m_handler_capture(a)
+
+    st = run_asm(build, ticks=300)
+    # both views advance once per tick; the ld retires 3 ticks after the
+    # csrr (li expands to lui+addiw, then the load)
+    assert result(st) == 3
+
+
+# ---------------------------------------------------------------------------
+# guest-owned timer: stimecmp→vstimecmp swap, VSTI delegated to VS
+# ---------------------------------------------------------------------------
+
+def test_guest_arms_vstimecmp_and_takes_vsti_at_vs():
+    def build(a, img):
+        prologue(a)
+        build_gstage_identity(img)
+        enter_vs(a, 0x400, vsatp=0, hideleg=0x444)
+        while a.pc < 0x400:
+            a.nop()
+        # VS guest: handler at 0x500 (vstvec), enable STI, arm its timer
+        a.li("t0", 0x500)
+        a.csrw(0x105, "t0")                  # stvec → vstvec (swap)
+        a.li("t0", C.IP_STIP)
+        a.csrw(0x104, "t0")                  # sie → vsie (VSTIE via shift)
+        a.li("t0", C.MSTATUS_SIE)
+        a.csrrs(0, 0x100, "t0")              # sstatus.SIE → vsstatus.SIE
+        a.csrr("t0", 0xC01)                  # guest reads time
+        a.addi("t0", "t0", 50)
+        a.csrw(0x14D, "t0")                  # stimecmp → vstimecmp (swap)
+        a.label("g_idle")
+        a.j("g_idle")
+        while a.pc < 0x500:
+            a.nop()
+        # VS trap handler: capture vscause then ecall → M
+        a.csrr("a0", 0x142)
+        a.ecall()
+        m_handler_capture(a)
+
+    st = run_asm(build, ticks=600)
+    # vscause = interrupt | STI (VS-level causes presented at S encodings)
+    assert int(st.regs[10]) == (1 << 63) | 5
+    assert int(st.counters.int_by_level[2]) == 1     # handled at VS
+    assert int(st.counters.timer_irqs) == 1
+
+
+# ---------------------------------------------------------------------------
+# stale-TLB regression: U-mode must not reuse an S-mode entry's verdict
+# ---------------------------------------------------------------------------
+
+def test_umode_load_cannot_reuse_smode_tlb_entry():
+    """S loads a kernel (U=0) page — TLB caches the S-mode verdict.  The
+    subsequent U-mode load of the same VA must page-fault; before the fix
+    it hit the S entry and passed its permission check."""
+    U_CODE = 0x1000
+
+    def build(a, img):
+        prologue(a)
+        build_vs_identity(img)               # identity P_KERN (U=0) tables
+        img.map_page(S_L0, U_CODE, U_CODE, P_GUEST)   # U-executable page
+        # M → S
+        a.li("t0", 1 << 11)
+        a.csrrs(0, 0x300, "t0")
+        a.li("t0", 0x400)
+        a.csrw(0x341, "t0")
+        a.mret()
+        while a.pc < 0x400:
+            a.nop()
+        # S: enable paging, warm the TLB with the kernel data page
+        a.li("t0", SV39 | (S_L2 >> 12))
+        a.csrw(0x180, "t0")
+        a.sfence_vma()
+        a.li("t1", 0x5000)
+        a.ld("s0", 0, "t1")                  # inserts 0x5000 entry (priv=S)
+        # drop to U at the U-executable page
+        a.li("t0", 1 << 8)
+        a.csrrc(0, 0x100, "t0")              # sstatus.SPP = 0 → U
+        a.li("t0", U_CODE)
+        a.csrw(0x141, "t0")                  # sepc
+        a.sret()
+        m_handler_capture(a)                 # M handler sits below U_CODE
+        while a.pc < U_CODE:
+            a.nop()
+        # U: same VA, same access — must fault (page has U=0)
+        a.ld("a0", 0, "t1")
+        a.nop()
+
+    st = run_asm(build)
+    assert result(st) == C.EXC_LPAGE_FAULT
+    assert csr_of(st, C.R_MTVAL) == 0x5000
+
+
+# ---------------------------------------------------------------------------
+# HLVX through an X-only G-stage page (asm-level)
+# ---------------------------------------------------------------------------
+
+def test_hlvx_reads_xonly_gstage_page():
+    MAGIC = 0x1BADB002
+
+    def build(a, img):
+        prologue(a)
+        img.store64(0x5000, MAGIC)
+        build_vs_identity(img)
+        build_gstage_identity(img)
+        # remap GPA 0x5000 execute-only at the G-stage
+        XONLY = (programs.PTE_V | programs.PTE_X | programs.PTE_U |
+                 programs.PTE_A | programs.PTE_D)
+        img.map_page(G_L0, 0x5000, 0x5000, XONLY)
+        a.li("t0", SV39 | (programs.G_L2 >> 12))
+        a.csrw(0x680, "t0")
+        a.li("t0", SV39 | (S_L2 >> 12))
+        a.csrw(0x280, "t0")
+        a.li("t0", C.HSTATUS_SPVP)
+        a.csrw(0x600, "t0")
+        a.li("t1", 0x5000)
+        a.hlvx_wu("a0", "t1")                # X perms at BOTH stages
+        exit_with(a, "a0")
+        m_handler_capture(a)
+
+    st = run_asm(build)
+    assert result(st) == MAGIC
+
+
+# ---------------------------------------------------------------------------
+# the preemptive 2-guest scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def preempt_fleet():
+    fleet = Fleet.boot([(programs.SHA(), programs.FFT()),
+                        programs.CRC32()],
+                       guests_per_hart=2, timeslice=200)
+    fleet.run(30000, chunk=1024)
+    return fleet
+
+
+def test_two_guest_preemption_golden_checks(preempt_fleet):
+    rep = preempt_fleet.report()
+    mixed = rep["sha+fft/2guest-preempt"]
+    pair = rep["crc32+crc32/2guest-preempt"]
+    for entry in (mixed, pair):
+        assert entry["done"]
+        assert entry["ok_a"] and entry["ok_b"] and entry["ok"]
+        assert entry["ctx_switches"] > 0
+        assert entry["timer_irqs"] > 0
+        # scheduler STIs are all handled at HS; guests also ran in VS
+        assert entry["int_by_level"][1] == entry["timer_irqs"]
+        assert entry["instret_virt"] > 0
+
+
+def test_two_guest_runs_are_time_sliced_not_serial(preempt_fleet):
+    """Preemption must interleave the guests: more context switches than
+    the single exit handoff a serial run would produce."""
+    rep = preempt_fleet.report()["sha+fft/2guest-preempt"]
+    assert rep["ctx_switches"] >= 3
+    # every preemption costs HS instructions: the hart retires more than
+    # the two guests alone would
+    assert rep["instret"] > rep["instret_virt"]
+
+
+class _OutOfWindowWorkload(programs.Workload):
+    """Malicious guest: touches GPA 0x10000, outside its 64 KiB window."""
+    name = "oob"
+
+    def asm(self, a):
+        a.label("workload_entry")
+        a.li("t0", 0x10000)
+        a.ld("a0", 0, "t0")
+        a.ret()
+
+    def golden(self):
+        return 0
+
+
+def test_scheduler_rejects_out_of_window_gpa():
+    """Isolation: the scheduler must never G-map a GPA beyond the guest's
+    window (it would alias the other guest's memory) — it kills the
+    machine with the offending GPA instead."""
+    fleet = Fleet.boot([(_OutOfWindowWorkload(), programs.SHA())],
+                       guests_per_hart=2, timeslice=200)
+    fleet.run(20000, chunk=1024)
+    c = fleet[0].counters
+    assert bool(c.done)
+    assert int(c.exit_code) == 0x10000
+
+
+def test_disarmed_timer_counter_parity():
+    """With no comparator armed, single-guest counters are bit-identical to
+    the pre-timer implementation (golden values recorded pre-PR)."""
+    import json
+    import pathlib
+    ref_path = pathlib.Path(__file__).resolve().parents[2] / \
+        "benchmarks" / "results" / "hext_runs.json"
+    ref = json.loads(ref_path.read_text())["workloads"]["crc32"]
+    wl = programs.CRC32()
+    fleet = Fleet.boot([wl, wl], guest=[False, True])
+    fleet.run(30000, chunk=1024)
+    rep = fleet.report()
+    for mode in ("native", "guest"):
+        got = rep[f"crc32/{mode}"]
+        for key in ("instret", "instret_virt", "ticks", "exc_by_level",
+                    "int_by_level", "pagefaults", "walks"):
+            assert got[key] == ref[mode][key], (mode, key)
+        assert got["timer_irqs"] == 0
+        assert got["ctx_switches"] == 0

@@ -1,0 +1,396 @@
+"""Direct unit tests for the interrupt/trap plumbing (ISSUE 2 satellites):
+
+* ``trap.pending_interrupt`` priority order and per-level enable gating,
+* ``trap.route`` delegation matrix (M → HS → VS),
+* ``machine._advance_timers`` CLINT semantics (armed vs disarmed),
+* TLB privilege-context tagging (a U-mode access must not reuse an
+  S-mode entry's permission verdict),
+* reserved PTE encodings (W=1,R=0) page-faulting at both stages,
+* HLVX carrying its execute-permission override through the G-stage.
+
+These paths were previously exercised only indirectly through workloads.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hext import csr as C
+from repro.core.hext import machine
+from repro.core.hext import tlb as TLB
+from repro.core.hext import translate as X
+from repro.core.hext import trap as TR
+
+
+def _csrs(**kw):
+    """init_csrs with named register overrides (R_* suffix keys)."""
+    c = C.init_csrs()
+    for name, val in kw.items():
+        c = c.at[getattr(C, f"R_{name.upper()}")].set(jnp.uint64(val))
+    return c
+
+
+def _pending(csrs, priv=3, virt=False):
+    take, cause = TR.pending_interrupt(
+        csrs, jnp.asarray(priv, jnp.int32), jnp.asarray(virt, bool))
+    return bool(take), int(cause)
+
+
+def _route(csrs, priv, virt, cause, is_int):
+    tgt = TR.route(csrs, jnp.asarray(priv, jnp.int32),
+                   jnp.asarray(virt, bool), jnp.uint64(cause),
+                   jnp.asarray(is_int, bool))
+    return int(tgt.priv), bool(tgt.virt)
+
+
+# ---------------------------------------------------------------------------
+# pending_interrupt: priority order MEI > MSI > MTI > SEI > SSI > STI > ...
+# ---------------------------------------------------------------------------
+
+class TestPendingPriority:
+    def test_mei_beats_msi_beats_mti(self):
+        with jax.experimental.enable_x64():
+            allm = C.IP_MEIP | C.IP_MSIP | C.IP_MTIP
+            c = _csrs(mip=allm, mie=allm, mstatus=C.MSTATUS_MIE)
+            assert _pending(c) == (True, 11)
+            c = _csrs(mip=C.IP_MSIP | C.IP_MTIP, mie=allm,
+                      mstatus=C.MSTATUS_MIE)
+            assert _pending(c) == (True, 3)
+            c = _csrs(mip=C.IP_MTIP, mie=allm, mstatus=C.MSTATUS_MIE)
+            assert _pending(c) == (True, 7)
+
+    def test_m_interrupts_beat_s_interrupts(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(mip=C.IP_MTIP | C.IP_SEIP,
+                      mie=C.IP_MTIP | C.IP_SEIP,
+                      mideleg=C.MIDELEG_FORCED | C.IP_SEIP,
+                      mstatus=C.MSTATUS_MIE | C.MSTATUS_SIE)
+            # both deliverable at priv=S: M-level wins
+            assert _pending(c, priv=1) == (True, 7)
+
+    def test_s_priority_sei_ssi_sti(self):
+        with jax.experimental.enable_x64():
+            alls = C.IP_SEIP | C.IP_SSIP | C.IP_STIP
+            c = _csrs(mip=alls, mie=alls,
+                      mideleg=C.MIDELEG_FORCED | alls,
+                      mstatus=C.MSTATUS_SIE)
+            assert _pending(c, priv=1) == (True, 9)
+            c = _csrs(mip=C.IP_SSIP | C.IP_STIP, mie=alls,
+                      mideleg=C.MIDELEG_FORCED | alls,
+                      mstatus=C.MSTATUS_SIE)
+            assert _pending(c, priv=1) == (True, 1)
+            c = _csrs(mip=C.IP_STIP, mie=alls,
+                      mideleg=C.MIDELEG_FORCED | alls,
+                      mstatus=C.MSTATUS_SIE)
+            assert _pending(c, priv=1) == (True, 5)
+
+
+class TestPendingEnables:
+    def test_m_gated_by_mie_at_m_only(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(mip=C.IP_MSIP, mie=C.IP_MSIP)   # mstatus.MIE = 0
+            assert _pending(c, priv=3) == (False, 0)
+            # from lower privilege, M interrupts always fire
+            assert _pending(c, priv=1)[0]
+            assert _pending(c, priv=0)[0]
+
+    def test_hs_gated_by_sie_at_hs_only(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(mip=C.IP_SSIP, mie=C.IP_SSIP,
+                      mideleg=C.MIDELEG_FORCED | C.IP_SSIP)
+            assert _pending(c, priv=1) == (False, 0)  # SIE=0 at HS
+            assert _pending(c, priv=0)[0]             # U always interruptible
+            c = _csrs(mip=C.IP_SSIP, mie=C.IP_SSIP,
+                      mideleg=C.MIDELEG_FORCED | C.IP_SSIP,
+                      mstatus=C.MSTATUS_SIE)
+            assert _pending(c, priv=1) == (True, 1)
+
+    def test_hs_interrupt_preempts_vs_regardless_of_guest_sie(self):
+        """The scheduler relies on this: STI delegated to HS fires while a
+        guest runs in VS even with all guest enables clear."""
+        with jax.experimental.enable_x64():
+            c = _csrs(mip=C.IP_STIP, mie=C.IP_STIP,
+                      mideleg=C.MIDELEG_FORCED | C.IP_STIP)
+            assert _pending(c, priv=1, virt=True) == (True, 5)
+
+    def test_vs_interrupt_gated_by_vsstatus_sie(self):
+        with jax.experimental.enable_x64():
+            base = dict(mip=C.IP_VSSIP, mie=C.IP_VSSIP,
+                        hideleg=C.IP_VSSIP)
+            c = _csrs(**base)
+            assert _pending(c, priv=1, virt=True) == (False, 0)
+            c = _csrs(vsstatus=C.MSTATUS_SIE, **base)
+            assert _pending(c, priv=1, virt=True) == (True, 2)
+            # VU mode: always interruptible for VS-level interrupts
+            c = _csrs(**base)
+            assert _pending(c, priv=0, virt=True) == (True, 2)
+
+    def test_vs_interrupt_not_deliverable_without_virt(self):
+        """hideleg'd VS interrupt targets VS — with V=0 it must not fire as
+        a VS-level interrupt."""
+        with jax.experimental.enable_x64():
+            c = _csrs(mip=C.IP_VSSIP, mie=C.IP_VSSIP, hideleg=C.IP_VSSIP,
+                      vsstatus=C.MSTATUS_SIE)
+            assert _pending(c, priv=1, virt=False) == (False, 0)
+
+
+# ---------------------------------------------------------------------------
+# route: the M → HS → VS delegation matrix
+# ---------------------------------------------------------------------------
+
+class TestRouteMatrix:
+    def test_exception_default_to_m(self):
+        with jax.experimental.enable_x64():
+            c = _csrs()
+            assert _route(c, 1, False, C.EXC_LPAGE_FAULT, False) == (3, False)
+
+    def test_exception_medeleg_to_hs(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(medeleg=1 << C.EXC_LPAGE_FAULT)
+            assert _route(c, 1, False, C.EXC_LPAGE_FAULT, False) == (1, False)
+            # HS faults never route to VS even with hedeleg set
+            c = _csrs(medeleg=1 << C.EXC_LPAGE_FAULT,
+                      hedeleg=1 << C.EXC_LPAGE_FAULT)
+            assert _route(c, 1, False, C.EXC_LPAGE_FAULT, False) == (1, False)
+
+    def test_exception_hedeleg_to_vs_only_when_virt(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(medeleg=1 << C.EXC_LPAGE_FAULT,
+                      hedeleg=1 << C.EXC_LPAGE_FAULT)
+            assert _route(c, 1, True, C.EXC_LPAGE_FAULT, False) == (1, True)
+            # medeleg'd but not hedeleg'd: guest fault lands at HS
+            c = _csrs(medeleg=1 << C.EXC_LPAGE_FAULT)
+            assert _route(c, 1, True, C.EXC_LPAGE_FAULT, False) == (1, False)
+
+    def test_traps_from_m_never_delegate(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(medeleg=0xFFFF, mideleg=0xFFFF, hedeleg=0xFFFF)
+            assert _route(c, 3, False, C.EXC_LPAGE_FAULT, False) == (3, False)
+            assert _route(c, 3, False, 3, True) == (3, False)
+
+    def test_interrupt_mideleg_hideleg_chain(self):
+        with jax.experimental.enable_x64():
+            # VSSI: mideleg VS bits are forced-one; hideleg decides HS vs VS
+            c = _csrs(hideleg=C.IP_VSSIP)
+            assert _route(c, 1, True, 2, True) == (1, True)    # → VS
+            c = _csrs()
+            assert _route(c, 1, True, 2, True) == (1, False)   # → HS
+            # STI: mideleg clear → M; set → HS (never VS: hideleg WARL-0)
+            c = _csrs()
+            assert _route(c, 1, True, 5, True) == (3, False)
+            c = _csrs(mideleg=C.MIDELEG_FORCED | C.IP_STIP)
+            assert _route(c, 1, True, 5, True) == (1, False)
+
+
+# ---------------------------------------------------------------------------
+# the virtual CLINT: armed comparators drive mip, disarmed leave it alone
+# ---------------------------------------------------------------------------
+
+class TestAdvanceTimers:
+    def test_disarmed_never_touches_mip(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(mip=C.IP_SSIP)              # software-injected bit
+            for _ in range(3):
+                c = machine._advance_timers(c)
+            assert int(c[C.R_MTIME]) == 3
+            assert int(c[C.R_MIP]) == C.IP_SSIP   # untouched
+
+    def test_armed_mtimecmp_sets_then_clears_mtip(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(mtimecmp=2)
+            c = machine._advance_timers(c)        # mtime=1 < 2
+            assert int(c[C.R_MIP]) & C.IP_MTIP == 0
+            c = machine._advance_timers(c)        # mtime=2 >= 2
+            assert int(c[C.R_MIP]) & C.IP_MTIP
+            # re-arming into the future clears the pending bit
+            c = c.at[C.R_MTIMECMP].set(jnp.uint64(100))
+            c = machine._advance_timers(c)
+            assert int(c[C.R_MIP]) & C.IP_MTIP == 0
+
+    def test_stimecmp_and_vstimecmp_drive_their_bits(self):
+        with jax.experimental.enable_x64():
+            c = _csrs(stimecmp=1, vstimecmp=2)
+            c = machine._advance_timers(c)
+            assert int(c[C.R_MIP]) & C.IP_STIP
+            assert int(c[C.R_MIP]) & C.IP_VSTIP == 0
+            c = machine._advance_timers(c)
+            assert int(c[C.R_MIP]) & C.IP_VSTIP
+
+
+# ---------------------------------------------------------------------------
+# TLB privilege-context tags
+# ---------------------------------------------------------------------------
+
+class TestTlbPrivTags:
+    def _mk(self, priv, sum_bit=False, mxr=False):
+        return (jnp.asarray(priv, jnp.int32), jnp.asarray(sum_bit, bool),
+                jnp.asarray(mxr, bool))
+
+    def test_cross_priv_lookup_misses(self):
+        with jax.experimental.enable_x64():
+            t = TLB.init_tlb()
+            virt = jnp.asarray(False, bool)
+            p1 = self._mk(1)
+            t = TLB.insert(t, jnp.uint64(0x5000), jnp.uint64(0x5000),
+                           jnp.asarray(0, jnp.int32),
+                           jnp.asarray(TLB.PERM_R, jnp.int32), virt, *p1)
+            hit, _, ok = TLB.lookup(t, jnp.uint64(0x5000), virt,
+                                    jnp.uint64(X.ACC_R), *p1)
+            assert bool(hit) and bool(ok)
+            # U-mode must not reuse the S-mode verdict
+            hit, _, _ = TLB.lookup(t, jnp.uint64(0x5000), virt,
+                                   jnp.uint64(X.ACC_R), *self._mk(0))
+            assert not bool(hit)
+
+    def test_sum_and_mxr_context_mismatch_misses(self):
+        with jax.experimental.enable_x64():
+            t = TLB.init_tlb()
+            virt = jnp.asarray(False, bool)
+            ctx = self._mk(1, sum_bit=True)
+            t = TLB.insert(t, jnp.uint64(0x6000), jnp.uint64(0x6000),
+                           jnp.asarray(0, jnp.int32),
+                           jnp.asarray(TLB.PERM_R, jnp.int32), virt, *ctx)
+            hit, _, _ = TLB.lookup(t, jnp.uint64(0x6000), virt,
+                                   jnp.uint64(X.ACC_R), *self._mk(1))
+            assert not bool(hit)                      # SUM flipped off
+            hit, _, _ = TLB.lookup(t, jnp.uint64(0x6000), virt,
+                                   jnp.uint64(X.ACC_R),
+                                   *self._mk(1, sum_bit=True, mxr=True))
+            assert not bool(hit)                      # MXR differs
+
+
+# ---------------------------------------------------------------------------
+# reserved PTE encodings + HLVX G-stage override (direct walker tests)
+# ---------------------------------------------------------------------------
+
+SV39 = C.ATP_MODE_SV39 << C.ATP_MODE_SHIFT
+
+
+def _mem_with(entries):
+    """Flat uint64 memory with {byte_addr: value} poked in."""
+    mem = np.zeros((1 << 12,), dtype=np.uint64)   # 32 KiB
+    for addr, val in entries.items():
+        mem[addr // 8] = np.uint64(val & ((1 << 64) - 1))
+    return jnp.asarray(mem)
+
+
+def _pte(pa, perms):
+    return ((pa >> 12) << 10) | perms
+
+
+class TestReservedPte:
+    def test_w_only_pte_faults_first_stage(self):
+        """W=1,R=0 is reserved — previously walked through as a pointer."""
+        with jax.experimental.enable_x64():
+            P = X.PTE_V | X.PTE_W | X.PTE_A | X.PTE_D
+            mem = _mem_with({
+                0x1000: _pte(0x2000, X.PTE_V),            # L2 → L1
+                0x2000: _pte(0x3000, X.PTE_V),            # L1 → L0
+                0x3000 + 5 * 8: _pte(0x5000, P),          # reserved leaf
+            })
+            csrs = _csrs(satp=SV39 | (0x1000 >> 12))
+            xr = X.translate(mem, csrs, jnp.asarray(1, jnp.int32),
+                             jnp.asarray(False, bool), jnp.uint64(0x5000),
+                             X.ACC_R)
+            assert bool(xr.fault)
+            assert int(xr.cause) == C.EXC_LPAGE_FAULT
+
+    def test_w_only_nonleaf_position_faults(self):
+        """A reserved encoding in a *non-leaf* slot must fault too, not be
+        dereferenced as a next-level pointer."""
+        with jax.experimental.enable_x64():
+            mem = _mem_with({
+                0x1000: _pte(0x2000, X.PTE_V | X.PTE_W),  # reserved pointer
+                0x2000: _pte(0x3000, X.PTE_V),
+                0x3000 + 5 * 8: _pte(0x5000, X.ALL_PERM_PTE),
+            })
+            csrs = _csrs(satp=SV39 | (0x1000 >> 12))
+            xr = X.translate(mem, csrs, jnp.asarray(1, jnp.int32),
+                             jnp.asarray(False, bool), jnp.uint64(0x5000),
+                             X.ACC_X)
+            assert bool(xr.fault)
+            assert int(xr.cause) == C.EXC_IPAGE_FAULT
+
+    def test_w_only_pte_faults_g_stage(self):
+        with jax.experimental.enable_x64():
+            P = X.PTE_V | X.PTE_W | X.PTE_U | X.PTE_A | X.PTE_D
+            mem = _mem_with({
+                0x1000: _pte(0x2000, X.PTE_V),
+                0x2000: _pte(0x3000, X.PTE_V),
+                0x3000 + 5 * 8: _pte(0x5000, P),
+            })
+            hgatp = jnp.uint64(SV39 | (0x1000 >> 12))
+            xr = X.g_translate(mem, hgatp, jnp.uint64(0x5000),
+                               jnp.uint64(X.ACC_R), jnp.asarray(False, bool))
+            assert bool(xr.fault)
+            assert int(xr.cause) == C.EXC_LGUEST_PAGE_FAULT
+
+
+class TestHlvxGStage:
+    def _setup(self, g_perms):
+        """vsatp BARE, hgatp maps GPA 0x5000 with `g_perms`."""
+        mem = _mem_with({
+            0x1000: _pte(0x2000, X.PTE_V),
+            0x2000: _pte(0x3000, X.PTE_V),
+            0x3000 + 5 * 8: _pte(0x5000, g_perms),
+            0x5000: 0xCAFE,
+        })
+        csrs = _csrs(hgatp=SV39 | (0x1000 >> 12))
+        return mem, csrs
+
+    def test_hlvx_reads_x_only_g_stage_page(self):
+        """HLVX requires execute permission INSTEAD of read — at both
+        stages.  An X-only G-stage page must satisfy it."""
+        with jax.experimental.enable_x64():
+            xonly = X.PTE_V | X.PTE_X | X.PTE_U | X.PTE_A | X.PTE_D
+            mem, csrs = self._setup(xonly)
+            xr = X.translate(mem, csrs, jnp.asarray(3, jnp.int32),
+                             jnp.asarray(False, bool), jnp.uint64(0x5000),
+                             X.ACC_R, force_virt=True, hlvx=True)
+            assert not bool(xr.fault)
+            assert int(xr.pa) == 0x5000
+            # while a plain hlv load of the same page still faults …
+            xr = X.translate(mem, csrs, jnp.asarray(3, jnp.int32),
+                             jnp.asarray(False, bool), jnp.uint64(0x5000),
+                             X.ACC_R, force_virt=True, hlvx=False)
+            assert bool(xr.fault)
+            assert int(xr.cause) == C.EXC_LGUEST_PAGE_FAULT
+
+    def test_hlvx_faults_on_r_only_g_stage_page(self):
+        with jax.experimental.enable_x64():
+            ronly = X.PTE_V | X.PTE_R | X.PTE_U | X.PTE_A | X.PTE_D
+            mem, csrs = self._setup(ronly)
+            xr = X.translate(mem, csrs, jnp.asarray(3, jnp.int32),
+                             jnp.asarray(False, bool), jnp.uint64(0x5000),
+                             X.ACC_R, force_virt=True, hlvx=True)
+            assert bool(xr.fault)
+            # …reported with the original (load) access type
+            assert int(xr.cause) == C.EXC_LGUEST_PAGE_FAULT
+
+    def test_hlvx_implicit_walk_fault_reports_load_cause(self):
+        """An hlvx whose VS-stage PTE *fetch* guest-faults must report the
+        original (load) access type, not the execute override."""
+        with jax.experimental.enable_x64():
+            mem = np.zeros((1 << 13,), dtype=np.uint64)   # 64 KiB
+
+            def poke(addr, val):
+                mem[addr // 8] = np.uint64(val & ((1 << 64) - 1))
+            # VS-stage tables at GPA 0x1000/0x2000/0x3000 → VA 0x5000
+            poke(0x1000, _pte(0x2000, X.PTE_V))
+            poke(0x2000, _pte(0x3000, X.PTE_V))
+            poke(0x3000 + 5 * 8, _pte(0x5000, X.ALL_PERM_PTE))
+            # G-stage (root 0x8000, Sv39x4) maps GPA 0x5000 but NOT the VS
+            # page-table pages → the implicit PTE fetch guest-faults
+            gp = X.PTE_V | X.PTE_R | X.PTE_W | X.PTE_X | X.PTE_U | \
+                X.PTE_A | X.PTE_D
+            poke(0x8000, _pte(0xC000, X.PTE_V))
+            poke(0xC000, _pte(0xD000, X.PTE_V))
+            poke(0xD000 + 5 * 8, _pte(0x5000, gp))
+            csrs = _csrs(vsatp=SV39 | (0x1000 >> 12),
+                         hgatp=SV39 | (0x8000 >> 12))
+            xr = X.translate(jnp.asarray(mem), csrs,
+                             jnp.asarray(3, jnp.int32),
+                             jnp.asarray(False, bool), jnp.uint64(0x5000),
+                             X.ACC_R, force_virt=True, hlvx=True)
+            assert bool(xr.fault) and bool(xr.implicit)
+            assert int(xr.cause) == C.EXC_LGUEST_PAGE_FAULT   # not I-GPF

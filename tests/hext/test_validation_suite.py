@@ -12,28 +12,14 @@ from repro.core.hext.programs import (G_L0, G_L1, G_L2, P_GUEST, P_KERN,
                                       S_L0, S_L1, S_L2)
 from tests.hext.conftest import (S_L0B, build_gstage_identity,
                                  build_vs_identity, build_vs_split_data,
-                                 csr_of, enter_vs, exit_with, result, run_asm)
+                                 csr_of, enter_vs, exit_with,
+                                 m_handler_capture, prologue, result,
+                                 run_asm)
 
 SV39 = 8 << 60
-MTVEC = 0x800            # shared M handler location in these tests
 
 # the long §3.4 validation suite — excluded from quick CI via -m "not slow"
 pytestmark = pytest.mark.slow
-
-
-def m_handler_capture(a):
-    """M handler at MTVEC: exits with mcause (tests read other CSRs from
-    final state)."""
-    while a.pc < MTVEC:
-        a.nop()
-    a.label("mh")
-    a.csrr("t0", 0x342)
-    exit_with(a, "t0")
-
-
-def prologue(a):
-    a.li("t0", MTVEC)
-    a.csrw(0x305, "t0")
 
 
 # ---------------------------------------------------------------------------
