@@ -49,6 +49,20 @@ def emit_repro_section():
           f"(range {min(overheads):.2f}–{max(overheads):.2f}×). "
           f"Batched 18-machine lockstep wall time: "
           f"{d['wall_seconds_batched']:.1f}s.\n")
+    curve = d.get("consolidation_overhead")
+    if curve:
+        print("### Consolidation-overhead curve (N tenants per hart)\n")
+        print("| N | mean overhead vs N× single guest | max |")
+        print("|---|---|---|")
+        for n, c in curve.items():
+            if c.get("mean_overhead"):
+                print(f"| {n} | {c['mean_overhead']:.3f}× | "
+                      f"{c['max_overhead']:.3f}× |")
+        print(f"\nPreemptive scheduler timeslice: "
+              f"{d.get('timeslice', '?')} ticks; per-N wall times: " +
+              ", ".join(f"N={n}: {w:.1f}s" for n, w in
+                        d.get("wall_seconds_preempt_by_n", {}).items()) +
+              ".\n")
 
 
 def emit_roofline_table(multi_pod=False):

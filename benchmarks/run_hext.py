@@ -2,12 +2,17 @@
 (one `Fleet` — the TPU-native 'many VMs in lockstep' mode) and dump the
 per-workload counters that reproduce paper Figures 4-7.
 
-A third column, ``2guest-preempt``, boots every workload twice per hart
-under the preemptive HS scheduler (timer-sliced round-robin, DESIGN.md
-§2c) and reports the virtualization overhead under preemption.
+On top of the native/guest pair, one ``{n}guest-preempt`` column per
+requested tenant count boots every workload N times per hart under the
+preemptive HS scheduler (timer-sliced round-robin, DESIGN.md §2c) and
+reports the **consolidation-overhead curve**: how virtualization overhead
+grows with tenants per hart — ``instret / (N × single-guest instret)`` for
+N ∈ {1, 2, 4} by default (the cloud-density measurement the paper's
+scenario motivates; add 8 with ``--guests``).
 
 Usage: PYTHONPATH=src python -m benchmarks.run_hext [--out PATH]
                                                     [--timeslice N]
+                                                    [--guests 1 2 4 ...]
                                                     [--no-preempt]
 """
 from __future__ import annotations
@@ -20,10 +25,13 @@ import time
 from repro.core.hext import programs
 from repro.core.hext.sim import Fleet, MASK64
 
+DEFAULT_GUEST_COUNTS = (1, 2, 4)
+
 
 def main(out_path: str = "benchmarks/results/hext_runs.json",
          max_ticks: int = 120000, chunk: int = 8192,
-         timeslice: int | None = None, preempt: bool = True):
+         timeslice: int | None = None, preempt: bool = True,
+         guest_counts=DEFAULT_GUEST_COUNTS):
     wls = programs.WORKLOADS
     t_start = time.time()
     # the batch: [native×9 ; guest×9]
@@ -34,17 +42,21 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
     wall = time.time() - t0
     counters = fleet.counters()
 
-    preempt_report = {}
-    wall_preempt = 0.0
-    if preempt:
-        # third column: each workload × 2 guests per hart, timer round-robin
-        pfleet = Fleet.boot(wls, guests_per_hart=2, timeslice=timeslice)
+    # consolidation columns: each workload × N tenants per hart, timer
+    # round-robin (every N is its own fleet — image sizes differ with N)
+    preempt_reports: dict = {}
+    wall_preempt: dict = {}
+    counts = tuple(guest_counts) if preempt else ()
+    ts = programs.DEFAULT_TIMESLICE if timeslice is None else int(timeslice)
+    for n in counts:
+        pfleet = Fleet.boot(wls, guests_per_hart=n, timeslice=ts)
         t1 = time.time()
-        pfleet.run(max_ticks, chunk=chunk)
-        wall_preempt = time.time() - t1
-        preempt_report = pfleet.report()
+        pfleet.run(max_ticks * n, chunk=chunk)
+        wall_preempt[n] = time.time() - t1
+        preempt_reports[n] = pfleet.report()
 
     results = {}
+    curve: dict = {n: [] for n in counts}
     for i, w in enumerate(wls):
         g = w.golden()
         entry = {
@@ -52,35 +64,65 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
             "native": counters[i].to_dict(g),
             "guest": counters[i + len(wls)].to_dict(g),
         }
-        p = preempt_report.get(f"{w.name}+{w.name}/2guest-preempt")
-        if p is not None:
-            # overhead vs running the two guests back-to-back without
-            # preemption: hart instret / (2 × single-guest instret)
-            p["overhead_vs_2x_guest"] = (
-                p["instret"] / max(2 * entry["guest"]["instret"], 1))
-            entry["2guest-preempt"] = p
+        for n in counts:
+            label = "+".join([w.name] * n) + f"/{n}guest-preempt"
+            p = preempt_reports[n].get(label)
+            if p is None:
+                continue
+            # overhead vs running the N tenants back-to-back without
+            # preemption: hart instret / (N × single-guest instret)
+            ovh = p["instret"] / max(n * entry["guest"]["instret"], 1)
+            p["overhead_vs_nx_guest"] = ovh
+            if n == 2:                        # legacy key, same number
+                p["overhead_vs_2x_guest"] = ovh
+            if p["ok"]:
+                curve[n].append(ovh)
+            else:
+                # an unfinished/failed hart has a truncated instret — keep
+                # the column but keep it out of the published curve
+                print(f"WARNING: {label} not ok — excluded from the "
+                      f"consolidation curve")
+            entry[f"{n}guest-preempt"] = p
         results[w.name] = entry
+    consolidation = {
+        str(n): {
+            "mean_overhead": sum(v) / len(v) if v else None,
+            "max_overhead": max(v) if v else None,
+        } for n, v in curve.items()
+    }
     out = {
         "wall_seconds_batched": wall,
-        "wall_seconds_preempt": wall_preempt,
+        "wall_seconds_preempt": sum(wall_preempt.values()),
+        "wall_seconds_preempt_by_n": {str(n): wall_preempt[n]
+                                      for n in counts},
         "setup_seconds": t0 - t_start,
+        "timeslice": ts,
+        "consolidation_overhead": consolidation,
         "workloads": results,
     }
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     for name, r in results.items():
-        n, gg = r["native"], r["guest"]
-        ratio = gg["instret"] / max(n["instret"], 1)
-        line = (f"{name:14s} ok={n['ok']}/{gg['ok']} instret {n['instret']}→"
-                f"{gg['instret']} ({ratio:.2f}x) exc {n['exc_by_level']}→"
-                f"{gg['exc_by_level']} pf {n['pagefaults']}→{gg['pagefaults']}")
-        p = r.get("2guest-preempt")
-        if p is not None:
-            line += (f" | 2guest ok={p['ok']} irq={p['timer_irqs']} "
-                     f"ctxsw={p['ctx_switches']} "
-                     f"ovh={p['overhead_vs_2x_guest']:.2f}x")
+        n_, gg = r["native"], r["guest"]
+        ratio = gg["instret"] / max(n_["instret"], 1)
+        line = (f"{name:14s} ok={n_['ok']}/{gg['ok']} instret "
+                f"{n_['instret']}→{gg['instret']} ({ratio:.2f}x) exc "
+                f"{n_['exc_by_level']}→{gg['exc_by_level']} "
+                f"pf {n_['pagefaults']}→{gg['pagefaults']}")
+        ovhs = []
+        for n in counts:
+            p = r.get(f"{n}guest-preempt")
+            if p is not None:
+                ovhs.append(f"N={n}:{p['overhead_vs_nx_guest']:.2f}x")
+        if ovhs:
+            line += " | consolidation " + " ".join(ovhs)
         print(line)
+    if consolidation:
+        print("consolidation-overhead curve (mean over workloads): " +
+              "  ".join(f"N={n}: {c['mean_overhead']:.3f}x"
+                        for n, c in consolidation.items()
+                        if c["mean_overhead"]))
     return out
 
 
@@ -91,8 +133,11 @@ if __name__ == "__main__":
     ap.add_argument("--timeslice", type=int, default=None,
                     help="preemption interval in ticks "
                          f"(default {programs.DEFAULT_TIMESLICE})")
+    ap.add_argument("--guests", type=int, nargs="+",
+                    default=list(DEFAULT_GUEST_COUNTS),
+                    help="tenant counts for the consolidation columns")
     ap.add_argument("--no-preempt", action="store_true",
-                    help="skip the 2guest-preempt column")
+                    help="skip the consolidation columns")
     a = ap.parse_args()
     main(a.out, a.max_ticks, timeslice=a.timeslice,
-         preempt=not a.no_preempt)
+         preempt=not a.no_preempt, guest_counts=tuple(a.guests))

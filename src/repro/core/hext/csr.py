@@ -40,8 +40,8 @@ PRV_U, PRV_S, PRV_M = 0, 1, 3
  R_HTVAL, R_HTINST, R_HGATP,
  R_VSSTATUS, R_VSTVEC, R_VSSCRATCH, R_VSEPC, R_VSCAUSE, R_VSTVAL, R_VSATP,
  R_MCOUNTEREN, R_MISA,
- R_MTIME, R_MTIMECMP, R_STIMECMP, R_VSTIMECMP,
- N_CSR) = range(43)
+ R_MTIME, R_MTIMECMP, R_STIMECMP, R_VSTIMECMP, R_HTIMEDELTA,
+ N_CSR) = range(44)
 
 # Timer comparators boot disarmed (all-ones): the virtual CLINT only drives
 # mip bits for a comparator once software writes it, so workloads that never
@@ -60,7 +60,7 @@ CSR_ADDR = {
     0x142: R_SCAUSE, 0x143: R_STVAL, 0x180: R_SATP,
     # H
     0x600: R_HSTATUS, 0x602: R_HEDELEG, 0x603: R_HIDELEG, 0x604: None,  # hie
-    0x605: None,  # htimedelta (unimpl → 0)
+    0x605: R_HTIMEDELTA,
     0x606: R_HCOUNTEREN, 0x607: R_HGEIE, 0x643: R_HTVAL, 0x644: None,  # hip
     0x645: R_HVIP, 0x64A: R_HTINST, 0x680: R_HGATP, 0xE12: R_HGEIP,
     # VS
@@ -106,6 +106,11 @@ HSTATUS_VTW = 1 << 21
 HSTATUS_VTSR = 1 << 22
 HSTATUS_WMASK = (HSTATUS_GVA | HSTATUS_SPV | HSTATUS_SPVP | HSTATUS_HU |
                  HSTATUS_VTVM | HSTATUS_VTW | HSTATUS_VTSR)
+
+# --- counter-enable bits (mcounteren/hcounteren/scounteren) ------------------
+COUNTEREN_CY = 1 << 0
+COUNTEREN_TM = 1 << 1
+COUNTEREN_IR = 1 << 2
 
 # --- interrupt bits (mip/mie layout) -----------------------------------------
 IP_SSIP = 1 << 1
@@ -243,13 +248,15 @@ def csr_read(csrs, addr, priv, virt):
     hit(0x645, hvip)
     hit(0x204, vsie)
     hit(0x244, vsip)
-    hit(0x605, u64(0))  # htimedelta: 0
-    hit(0xC01, csrs[R_MTIME])                       # time: RO mtime view
+    # time: read-only view of mtime; under V=1 the guest sees the
+    # hypervisor-shifted time base mtime + htimedelta
+    hit(0xC01, _sel(virt, csrs[R_MTIME] + csrs[R_HTIMEDELTA],
+                    csrs[R_MTIME]))
     hit(0x14D, _sel(virt, csrs[R_VSTIMECMP], csrs[R_STIMECMP]))
 
     for addr_const, idx in CSR_ADDR.items():
         if idx is None or addr_const in (0x100, 0x104, 0x144, 0x604, 0x644,
-                                         0x645, 0x204, 0x244, 0x605, 0xC01,
+                                         0x645, 0x204, 0x244, 0xC01,
                                          0x14D):
             continue
         v = csrs[idx]
@@ -268,8 +275,20 @@ def csr_read(csrs, addr, priv, virt):
     # hstatus.VTVM: VS access to satp traps as virtual instruction
     vtvm = (csrs[R_HSTATUS] & u64(HSTATUS_VTVM)) != 0
     vinst = vinst | (virt & (a == 0x180) & vtvm & (priv < 3))
+    # time (0xC01) is gated by the counter-enable TM bits: mcounteren for
+    # any sub-M read, scounteren additionally for U/VU, and hcounteren for
+    # V=1 (mcounteren clear → illegal; hcounteren/scounteren clear under
+    # V=1 → virtual instruction, per the H spec's counter-access rules).
+    tm_m = (csrs[R_MCOUNTEREN] & u64(COUNTEREN_TM)) != 0
+    tm_h = (csrs[R_HCOUNTEREN] & u64(COUNTEREN_TM)) != 0
+    tm_s = (csrs[R_SCOUNTEREN] & u64(COUNTEREN_TM)) != 0
+    is_time = a == 0xC01
+    time_ill = is_time & (priv < 3) & (
+        ~tm_m | (~virt & (priv == 0) & ~tm_s))
+    time_vinst = is_time & virt & tm_m & (~tm_h | ((priv == 0) & ~tm_s))
+    vinst = vinst | time_vinst
     priv_ok = priv >= req
-    ok = known & priv_ok & jnp.logical_not(vinst)
+    ok = known & priv_ok & jnp.logical_not(vinst) & jnp.logical_not(time_ill)
     return val, ok, vinst & known
 
 
@@ -333,7 +352,8 @@ def csr_write(csrs, addr, value, priv, virt):
              0x342: (R_MCAUSE, full), 0x343: (R_MTVAL, full),
              0x34B: (R_MTVAL2, full), 0x34A: (R_MTINST, full),
              0x106: (R_SCOUNTEREN, full),
-             0x600: (R_HSTATUS, HSTATUS_WMASK), 0x606: (R_HCOUNTEREN, full),
+             0x600: (R_HSTATUS, HSTATUS_WMASK), 0x605: (R_HTIMEDELTA, full),
+             0x606: (R_HCOUNTEREN, full),
              0x607: (R_HGEIE, full), 0x643: (R_HTVAL, full),
              0x64A: (R_HTINST, full), 0x680: (R_HGATP, full),
              0x205: (R_VSTVEC, full), 0x240: (R_VSSCRATCH, full),
@@ -354,7 +374,6 @@ def csr_write(csrs, addr, value, priv, virt):
     # read-only CSRs (hgeip, misa treated RO here): write ignored but legal @M
     case_v(0xE12, csrs)
     case_v(0x301, csrs)
-    case_v(0x605, csrs)
     case_v(0xC01, csrs)   # time: RO region → write faults via read_only below
 
     minp = csr_min_priv(a).astype(priv.dtype)

@@ -404,6 +404,15 @@ def execute(state, instr):
     is_mtime_io = pa_word == _u(MMIO_MTIME)
     is_mmio = (is_console | is_done_io | is_ctxsw_io | is_mtimecmp_io |
                is_mtime_io)
+    # final-PA bounds: a translated (or bare) PA that is neither RAM nor a
+    # decoded MMIO register is an access fault — it must not alias back
+    # into RAM through the modulo-wrapped word index.  Loads are further
+    # restricted to the *readable* MMIO registers (the CLINT pair); the
+    # write-only ones (console/done/ctxsw) have no read decode, so a load
+    # from them would otherwise wrap into RAM too.
+    mmio_readable = is_mtimecmp_io | is_mtime_io
+    pa_oob = (~is_mmio & (xr.pa >= _u(s["mem"].shape[0] * 8))) | \
+        (any_load & is_mmio & ~mmio_readable)
 
     ld_val = mem_read(s["mem"], xr.pa, size, uns)
     # CLINT reads: mtime / mtimecmp come from the timer registers
@@ -418,6 +427,7 @@ def execute(state, instr):
     mem_op = (any_load | any_store) & ~hx_vinst & ~hx_illegal
     mem_fault_align = mem_op & misaligned
     mem_fault_page = mem_op & ~misaligned & xr.fault
+    mem_fault_oob = mem_op & ~misaligned & ~xr.fault & pa_oob
 
     # tinst for guest page faults (paper tinst_tests): pseudoinstruction for
     # implicit PTE-walk faults, rs1-cleared transform for explicit accesses
@@ -436,9 +446,13 @@ def execute(state, instr):
                             C.EXC_LADDR_MISALIGNED)
     f_align = Fault(mem_fault_align, _u(align_cause), _u(addr), _u(0),
                     jnp.asarray(virt | force_virt, bool), _u(0))
-    fault = merge_fault(merge_fault(f_align, f_mem), fault)
+    oob_cause = jnp.where(any_store, C.EXC_SACCESS, C.EXC_LACCESS)
+    f_oob = Fault(mem_fault_oob, _u(oob_cause), _u(addr), _u(0),
+                  jnp.asarray(virt | force_virt, bool), _u(0))
+    fault = merge_fault(merge_fault(merge_fault(f_align, f_mem), f_oob),
+                        fault)
 
-    mem_ok = mem_op & ~misaligned & ~xr.fault
+    mem_ok = mem_op & ~misaligned & ~xr.fault & ~pa_oob
     wb = jnp.where(any_load & mem_ok, ld_val, wb)
     do_wb = do_wb | (any_load & mem_ok)
     new_mem = jnp.where(any_store & mem_ok & ~is_mmio, st_mem, new_mem)

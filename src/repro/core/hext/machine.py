@@ -131,18 +131,24 @@ def _advance_timers(csrs):
     *armed* comparator (mtimecmp / stimecmp / vstimecmp, Sstc-style) drives
     its mip bit from the comparison.  Disarmed comparators (the boot value,
     2^64-1) leave their mip bit fully software-owned — hvip injection and
-    direct mip writes behave exactly as before the timer existed."""
+    direct mip writes behave exactly as before the timer existed.
+
+    The VS comparator sees the *guest's* time base: vstimecmp compares
+    against mtime + htimedelta, so a hypervisor that maintains per-guest
+    htimedelta across context switches gives each guest timer interrupts in
+    its own virtual time."""
     mtime = csrs[C.R_MTIME] + _u(1)
     csrs = csrs.at[C.R_MTIME].set(mtime)
     mip = csrs[C.R_MIP]
-    for cmp_idx, bit in ((C.R_MTIMECMP, C.IP_MTIP),
-                         (C.R_STIMECMP, C.IP_STIP),
-                         (C.R_VSTIMECMP, C.IP_VSTIP)):
+    vs_time = mtime + csrs[C.R_HTIMEDELTA]
+    for cmp_idx, bit, now in ((C.R_MTIMECMP, C.IP_MTIP, mtime),
+                              (C.R_STIMECMP, C.IP_STIP, mtime),
+                              (C.R_VSTIMECMP, C.IP_VSTIP, vs_time)):
         cmpv = csrs[cmp_idx]
         armed = cmpv != _u(C.TIMER_DISARMED)
         fired = mip | _u(bit)
         idle = mip & ~_u(bit)
-        mip = jnp.where(armed, jnp.where(mtime >= cmpv, fired, idle), mip)
+        mip = jnp.where(armed, jnp.where(now >= cmpv, fired, idle), mip)
     return csrs.at[C.R_MIP].set(mip)
 
 
@@ -160,10 +166,18 @@ def step(state: Dict) -> Dict:
 
     # ---- 2. fetch + execute -------------------------------------------------
     xr, walked = isa.translate_cached(s, s["pc"], X.ACC_X)
-    fetch_fault = xr.fault
+    # fetching from a PA beyond memory (MMIO included — nothing up there is
+    # executable) is an instruction access fault, not a wrap into RAM
+    fetch_oob = ~xr.fault & (xr.pa >= _u(s["mem"].shape[0] * 8))
+    fetch_fault = xr.fault | fetch_oob
     # fetch guest-page-fault tinst is always 0
-    f_fetch = isa.Fault(fetch_fault, xr.cause, xr.tval, xr.tval2, xr.gva,
-                        _u(0))
+    f_fetch = isa.Fault(
+        fetch_fault,
+        jnp.where(xr.fault, xr.cause, _u(C.EXC_IACCESS)),
+        jnp.where(xr.fault, xr.tval, _u(s["pc"])),
+        jnp.where(xr.fault, xr.tval2, _u(0)),
+        jnp.where(xr.fault, xr.gva, s["virt"]),
+        _u(0))
     word = s["mem"][(xr.pa >> _u(3)).astype(jnp.int32) % s["mem"].shape[0]]
     instr = jnp.where((xr.pa & _u(4)) != 0, word >> _u(32),
                       word & _u(0xFFFFFFFF))

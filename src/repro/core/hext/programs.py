@@ -13,8 +13,16 @@ Two system images per workload:
 
 Both run the *identical* workload code — the executed-instruction and
 exception-count deltas are exactly the paper's Figures 5–7.
+
+A third image family (``build_image_nguest``) boots N guests per hart
+under a preemptive HS scheduler (time-sliced round-robin with per-guest
+G-stage tables, 64 KiB windows, and htimedelta-virtualized clocks) — the
+paper's cloud-consolidation scenario; see ``sched_layout`` / DESIGN.md
+§2c.
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import numpy as np
 
@@ -310,30 +318,81 @@ MMIO_CTXSW = 0x10000010
 SATP_SV39 = 8 << 60
 
 # ---------------------------------------------------------------------------
-# preemptive 2-guest layout (paper §3.2 cloud scenario: time-sliced VMs).
+# preemptive N-guest layout (paper §3.2 cloud scenario: time-sliced VMs).
 # The M/HS region keeps the single-guest map; each guest gets a private
 # 64 KiB host-physical window and a private G-stage table set, and the
-# HS scheduler round-robins between them on timer interrupts.
+# HS scheduler round-robins between them on timer interrupts.  Everything
+# below SCHED_CUR is code; the 0x2000..0x4000 region holds scheduler state
+# (computed per N by `sched_layout`), then the per-guest G-stage table
+# blocks, then the guest windows.
 # ---------------------------------------------------------------------------
 HS2_HANDLER = 0x0800       # scheduler trap handler (code may run past 0x1000)
-SCHED_CUR = 0x2000         # current guest index (0/1)
+SCHED_CUR = 0x2000         # current guest index
 SCHED_CURCTX = 0x2008      # &ctx[cur]
 SCHED_CURGI = 0x2010       # &ginfo[cur]
+SCHED_N = 0x2018           # guest count
 GINFO0 = 0x2040            # per-guest {hgatp, g_l0, window, done} blocks
 GINFO_SIZE = 0x40
-GUEST_RES = 0x2100         # per-guest checksum mailboxes (host-readable)
-CTX0 = 0x2200              # per-guest saved context (x1..x31 then CSRs)
+GUEST_RES = 0x2100         # per-guest checksum mailboxes (N=2 layout)
+CTX0 = 0x2200              # per-guest saved context (N=2 layout)
 CTX_SIZE = 0x200
 CTX_PC = 0x100             # byte offset of the sepc slot inside a context
-G2_L2 = (0x4000, 0xC000)   # per-guest Sv39x4 roots (16 KiB, 16K-aligned)
+GTAB0 = 0x4000             # first per-guest G-stage table block
+GTAB_STRIDE = 0x8000       # 16K root + L1 + L0 pages (+ slack), 16K-aligned
+G2_L2 = (0x4000, 0xC000)   # legacy N=2 table addresses (== sched_layout(2))
 G2_L1 = (0x8000, 0x10000)
 G2_L0 = (0x9000, 0x11000)
 GUEST_WIN = 0x10000        # 64 KiB of guest-physical space per guest
-PB = (0x20000, 0x30000)    # host-physical guest window bases
+PB = (0x20000, 0x30000)    # legacy N=2 window bases (== sched_layout(2))
 DEFAULT_TIMESLICE = 1000   # ticks between preemptions
+MAX_GUESTS = 8             # HS boot code must fit below HS2_HANDLER
 
 # saved per guest at CTX_PC + 8*i: sepc (guest pc) then the VS CSR bank
-_VS_CTX_CSRS = (0x141, 0x200, 0x205, 0x240, 0x241, 0x242, 0x243, 0x280)
+# (vstimecmp included — an armed guest timer must not leak to its sibling)
+_VS_CTX_CSRS = (0x141, 0x200, 0x205, 0x240, 0x241, 0x242, 0x243, 0x280,
+                0x24D)
+# one more slot: the guest's frozen virtual time (mtime + htimedelta at
+# deschedule); on resume the scheduler rebuilds htimedelta from it
+CTX_VTIME = CTX_PC + 8 * len(_VS_CTX_CSRS)
+
+
+class SchedLayout(NamedTuple):
+    """Computed memory map for an N-guests-per-hart scheduler image.
+
+    For n == 2 every field equals the legacy module-level constants, so the
+    committed 2-guest benchmark golden stays reproducible."""
+    n: int
+    ginfo0: int            # per-guest info blocks (GINFO_SIZE each)
+    guest_res: int         # per-guest checksum mailboxes (8 bytes each)
+    ctx0: int              # per-guest context save slots (CTX_SIZE each)
+    g_l2: tuple            # per-guest Sv39x4 roots (16 KiB, 16K-aligned)
+    g_l1: tuple
+    g_l0: tuple
+    win: tuple             # per-guest host-physical window bases
+    mem_words: int         # total image size in 64-bit words
+
+
+def _align(x: int, a: int) -> int:
+    return -(-x // a) * a
+
+
+def sched_layout(n: int) -> SchedLayout:
+    """Memory map for an N-guest scheduler image (1 ≤ n ≤ MAX_GUESTS)."""
+    if not 1 <= n <= MAX_GUESTS:
+        raise ValueError(f"guests_per_hart must be in 1..{MAX_GUESTS}, "
+                         f"got {n}")
+    ginfo_end = GINFO0 + n * GINFO_SIZE
+    guest_res = max(GUEST_RES, _align(ginfo_end, 0x40))
+    ctx0 = max(CTX0, _align(guest_res + 8 * n, 0x100))
+    assert ctx0 + n * CTX_SIZE <= GTAB0, "context area overruns G tables"
+    g_l2 = tuple(GTAB0 + i * GTAB_STRIDE for i in range(n))
+    g_l1 = tuple(b + 0x4000 for b in g_l2)
+    g_l0 = tuple(b + 0x5000 for b in g_l2)
+    win0 = max(0x20000, _align(GTAB0 + n * GTAB_STRIDE, GUEST_WIN))
+    win = tuple(win0 + i * GUEST_WIN for i in range(n))
+    return SchedLayout(n=n, ginfo0=GINFO0, guest_res=guest_res, ctx0=ctx0,
+                       g_l2=g_l2, g_l1=g_l1, g_l0=g_l0, win=win,
+                       mem_words=(win0 + n * GUEST_WIN) // 8)
 
 
 def _build_kernel_pts(img: Image, perms: int):
@@ -364,10 +423,17 @@ def _build_gstage_pts(img: Image):
 # firmware / kernels / hypervisor
 # ---------------------------------------------------------------------------
 
-def _m_firmware(native: bool) -> Asm:
+def _m_firmware(native: bool, counteren: bool = False) -> Asm:
     a = Asm(M_BOOT)
     a.li("t0", M_HANDLER)
     a.csrw(0x305, "t0")                       # mtvec
+    if counteren:
+        # open the counters (time/cycle/instret) to HS and below — the
+        # scheduler hypervisor reads `time` to arm its slice timer.  The
+        # single-guest firmware leaves mcounteren at its reset value (0) so
+        # those images stay bit-identical to the pre-counteren goldens.
+        a.li("t0", 7)
+        a.csrw(0x306, "t0")                   # mcounteren: CY|TM|IR
     if native:
         # delegate S-level page faults + illegal etc to S; keep ecall-S at M
         a.li("t0", (1 << 12) | (1 << 13) | (1 << 15) | (1 << 8))
@@ -491,42 +557,59 @@ def _hypervisor() -> Asm:
     return a
 
 
-def _scheduler_hypervisor(timeslice: int) -> Asm:
-    """xvisor-lite with a preemptive round-robin scheduler: two guests per
+def _scheduler_hypervisor(timeslice: int, n: int = 2) -> Asm:
+    """xvisor-lite with a preemptive round-robin scheduler: N guests per
     hart, time-sliced on the HS timer (stimecmp/STI), VSTI-style injection
     left to the guests' own vstimecmp.  Each guest owns a host-physical
     window and a private G-stage table set; on-demand G-stage mapping adds
-    the window offset so both guests see the same guest-physical map."""
+    the window offset so every guest sees the same guest-physical map.
+
+    Round-robin is the generalized ``next = (cur + 1) % N`` with finished
+    guests skipped; when no *other* guest is live the timer only re-arms.
+    Each guest also gets a virtualized time base: on deschedule the
+    scheduler records the guest's virtual time (``mtime + htimedelta``) in
+    its context, and on resume rebuilds ``htimedelta`` so guest time
+    excludes the ticks it spent descheduled."""
+    lay = sched_layout(n)
     a = Asm(HS_ENTRY)
     a.li("t0", HS2_HANDLER)
     a.csrw(0x105, "t0")                       # stvec (HS)
     # per-guest info blocks: {hgatp, G-stage L0, window base, done}
-    for i in (0, 1):
-        a.li("t0", GINFO0 + i * GINFO_SIZE)
-        a.li("t1", SATP_SV39 | (G2_L2[i] >> 12))
+    for i in range(n):
+        a.li("t0", lay.ginfo0 + i * GINFO_SIZE)
+        a.li("t1", SATP_SV39 | (lay.g_l2[i] >> 12))
         a.sd("t1", 0, "t0")
-        a.li("t1", G2_L0[i])
+        a.li("t1", lay.g_l0[i])
         a.sd("t1", 8, "t0")
-        a.li("t1", PB[i])
+        a.li("t1", lay.win[i])
         a.sd("t1", 16, "t0")
         a.sd("zero", 24, "t0")
     # scheduler state: guest 0 is current
     a.li("t0", SCHED_CUR)
     a.sd("zero", 0, "t0")
-    a.li("t1", CTX0)
+    a.li("t1", lay.ctx0)
     a.sd("t1", 8, "t0")                       # SCHED_CURCTX
-    a.li("t1", GINFO0)
+    a.li("t1", lay.ginfo0)
     a.sd("t1", 16, "t0")                      # SCHED_CURGI
-    # guest 1 first activates at its kernel entry (ctx GPRs/CSRs stay zero)
-    a.li("t0", CTX0 + CTX_SIZE)
-    a.li("t1", KERN_ENTRY)
-    a.sd("t1", CTX_PC, "t0")
+    a.li("t1", n)
+    a.sd("t1", 24, "t0")                      # SCHED_N
+    # guests 1..n-1 first activate at the kernel entry (ctx GPRs/CSRs and
+    # the virtual-time slot stay zero: their clocks start at ~0 on resume);
+    # the saved vstimecmp must start DISARMED (all-ones), not 0
+    for i in range(1, n):
+        a.li("t0", lay.ctx0 + i * CTX_SIZE)
+        a.li("t1", KERN_ENTRY)
+        a.sd("t1", CTX_PC, "t0")
+        a.li("t1", -1)
+        a.sd("t1", CTX_PC + 8 * _VS_CTX_CSRS.index(0x24D), "t0")
     # hedeleg: guests handle their own VS-stage page faults + ecall-U
     a.li("t0", (1 << 12) | (1 << 13) | (1 << 15) | (1 << 8))
     a.csrw(0x602, "t0")
     a.li("t0", 0x444)
     a.csrw(0x603, "t0")                       # hideleg: VS interrupts → VS
-    a.li("t0", SATP_SV39 | (G2_L2[0] >> 12))
+    a.li("t0", 7)
+    a.csrw(0x606, "t0")                       # hcounteren: guests read time
+    a.li("t0", SATP_SV39 | (lay.g_l2[0] >> 12))
     a.csrw(0x680, "t0")                       # hgatp ← guest 0
     a.hfence_gvma()
     # arm the scheduler timer: sie.STIE, stimecmp = time + slice (STI stays
@@ -538,6 +621,10 @@ def _scheduler_hypervisor(timeslice: int) -> Asm:
     a.li("t1", timeslice)
     a.add("t0", "t0", "t1")
     a.csrw(0x14D, "t0")                       # stimecmp
+    # guest 0's clock starts at 0: htimedelta = -time
+    a.csrr("t0", 0xC01)
+    a.sub("t0", "zero", "t0")
+    a.csrw(0x605, "t0")                       # htimedelta
     # enter guest 0
     a.li("t0", (1 << 7) | (1 << 8))           # hstatus.SPV|SPVP
     a.csrw(0x600, "t0")
@@ -555,9 +642,10 @@ def _scheduler_hypervisor(timeslice: int) -> Asm:
     a.csrw(0x140, "t6")                       # sscratch ← t6 (li scratch)
     a.li("t6", SCHED_CURCTX)
     a.ld("t6", 0, "t6")                       # t6 = current guest's ctx
-    a.sd("t0", 8 * 5, "t6")                   # park t0-t2 in their ctx slots
+    a.sd("t0", 8 * 5, "t6")                   # park t0-t3 in their ctx slots
     a.sd("t1", 8 * 6, "t6")
     a.sd("t2", 8 * 7, "t6")
+    a.sd("t3", 8 * 28, "t6")
     a.csrr("t0", 0x142)                       # scause
     a.blt("t0", "zero", "h2_timer")           # interrupt → only STI enabled
     a.li("t1", 10)
@@ -578,7 +666,7 @@ def _scheduler_hypervisor(timeslice: int) -> Asm:
     a.csrr("t0", 0x643)                       # htval = GPA >> 2
     a.slli("t0", "t0", 2)                     # GPA
     # isolation: a GPA outside the guest's 64 KiB window must never be
-    # mapped (it would land in the other guest's window or wrap into HS
+    # mapped (it would land in a sibling guest's window or wrap into HS
     # memory) — kill the machine with the offending GPA as exit code
     a.li("t1", GUEST_WIN)
     a.bltu("t0", "t1", "h2_map_ok")
@@ -602,27 +690,39 @@ def _scheduler_hypervisor(timeslice: int) -> Asm:
     a.ori("t0", "t0", P_GUEST)
     a.sd("t0", 0, "t1")                       # write G-stage leaf
     a.hfence_gvma()
-    a.label("h2_ret")                         # restore t0-t2/t6 → guest
+    a.label("h2_ret")                         # restore t0-t3/t6 → guest
     a.li("t6", SCHED_CURCTX)
     a.ld("t6", 0, "t6")
     a.ld("t0", 8 * 5, "t6")
     a.ld("t1", 8 * 6, "t6")
     a.ld("t2", 8 * 7, "t6")
+    a.ld("t3", 8 * 28, "t6")
     a.csrr("t6", 0x140)
     a.sret()
 
     # ---- timer tick: round-robin preemption --------------------------------
+    # scan (cur+1) % n, (cur+2) % n, … for the first live guest; coming
+    # back around to cur means nobody else runs → re-arm and resume cur.
     a.label("h2_timer")
-    a.li("t0", SCHED_CUR)
-    a.ld("t0", 0, "t0")
-    a.li("t1", 1)
-    a.sub("t0", "t1", "t0")                   # other = 1 - cur
-    a.slli("t1", "t0", 6)
-    a.li("t2", GINFO0)
-    a.add("t1", "t1", "t2")
-    a.ld("t1", 24, "t1")                      # ginfo[other].done
-    a.beqz("t1", "h2_save_switch")
-    a.csrr("t0", 0xC01)                       # other finished: re-arm only
+    a.li("t6", SCHED_CUR)
+    a.ld("t0", 0, "t6")                       # cur
+    a.ld("t1", 24, "t6")                      # n
+    a.mv("t2", "t0")                          # cand ← cur
+    a.label("h2_scan")
+    a.addi("t2", "t2", 1)
+    a.blt("t2", "t1", "h2_scan_ck")
+    a.li("t2", 0)                             # wrap: next = (cand+1) % n
+    a.label("h2_scan_ck")
+    a.beq("t2", "t0", "h2_rearm")             # full circle → only cur lives
+    a.slli("t3", "t2", 6)                     # × GINFO_SIZE
+    a.li("t6", lay.ginfo0)
+    a.add("t3", "t3", "t6")
+    a.ld("t3", 24, "t3")                      # ginfo[cand].done
+    a.bnez("t3", "h2_scan")
+    a.j("h2_save_switch")                     # t2 = next live guest
+
+    a.label("h2_rearm")
+    a.csrr("t0", 0xC01)
     a.li("t1", timeslice)
     a.add("t0", "t0", "t1")
     a.csrw(0x14D, "t0")
@@ -632,7 +732,7 @@ def _scheduler_hypervisor(timeslice: int) -> Asm:
     a.li("t6", SCHED_CURCTX)
     a.ld("t6", 0, "t6")
     for r in range(1, 31):
-        if r in (5, 6, 7):                    # t0-t2 already parked
+        if r in (5, 6, 7, 28):                # t0-t3 already parked
             continue
         a.sd(f"x{r}", 8 * r, "t6")
     a.csrr("t0", 0x140)                       # original t6
@@ -640,28 +740,35 @@ def _scheduler_hypervisor(timeslice: int) -> Asm:
     for i, csr in enumerate(_VS_CTX_CSRS):    # sepc + VS CSR bank
         a.csrr("t0", csr)
         a.sd("t0", CTX_PC + 8 * i, "t6")
+    a.csrr("t0", 0xC01)                       # freeze the guest's clock:
+    a.csrr("t3", 0x605)                       # vtime = mtime + htimedelta
+    a.add("t0", "t0", "t3")
+    a.sd("t0", CTX_VTIME, "t6")
+    # fall through: t2 = target guest index
 
-    a.label("h2_make_other_current")          # (also the exit-handoff path)
+    a.label("h2_switch_to")                   # (also the exit-handoff path)
     a.li("t0", SCHED_CUR)
-    a.ld("t1", 0, "t0")
-    a.li("t2", 1)
-    a.sub("t1", "t2", "t1")                   # other
-    a.sd("t1", 0, "t0")                       # cur ← other
-    a.slli("t2", "t1", 9)                     # × CTX_SIZE
-    a.li("t3", CTX0)
-    a.add("t2", "t2", "t3")
-    a.sd("t2", 8, "t0")                       # SCHED_CURCTX
-    a.slli("t3", "t1", 6)                     # × GINFO_SIZE
-    a.li("t4", GINFO0)
+    a.sd("t2", 0, "t0")                       # cur ← target
+    a.slli("t1", "t2", 9)                     # × CTX_SIZE
+    a.li("t3", lay.ctx0)
+    a.add("t1", "t1", "t3")
+    a.sd("t1", 8, "t0")                       # SCHED_CURCTX
+    a.slli("t3", "t2", 6)                     # × GINFO_SIZE
+    a.li("t4", lay.ginfo0)
     a.add("t3", "t3", "t4")
     a.sd("t3", 16, "t0")                      # SCHED_CURGI
     a.ld("t4", 0, "t3")
-    a.csrw(0x680, "t4")                       # hgatp ← other's root
+    a.csrw(0x680, "t4")                       # hgatp ← target's root
     a.hfence_gvma()
-    a.mv("t6", "t2")                          # t6 = other's ctx
+    a.mv("t6", "t1")                          # t6 = target's ctx
     for i, csr in enumerate(_VS_CTX_CSRS):
         a.ld("t0", CTX_PC + 8 * i, "t6")
         a.csrw(csr, "t0")
+    a.ld("t0", CTX_VTIME, "t6")               # resume the guest's clock:
+    a.csrr("t3", 0xC01)                       # htimedelta = vtime - mtime
+    a.sub("t0", "t0", "t3")
+    a.csrw(0x605, "t0")
+    a.csrw(0x645, "zero")                     # drop stale VS pending bits
     a.li("t0", MMIO_CTXSW)                    # count the context switch
     a.sd("zero", 0, "t0")
     a.csrr("t0", 0xC01)                       # re-arm the slice
@@ -682,27 +789,46 @@ def _scheduler_hypervisor(timeslice: int) -> Asm:
     a.li("t0", SCHED_CUR)
     a.ld("t1", 0, "t0")                       # cur
     a.slli("t2", "t1", 3)
-    a.li("t0", GUEST_RES)
+    a.li("t0", lay.guest_res)
     a.add("t2", "t2", "t0")
     a.sd("a0", 0, "t2")                       # mailbox[cur] ← checksum
     a.slli("t2", "t1", 6)
-    a.li("t0", GINFO0)
+    a.li("t0", lay.ginfo0)
     a.add("t2", "t2", "t0")
     a.li("t0", 1)
     a.sd("t0", 24, "t2")                      # ginfo[cur].done = 1
-    a.li("t0", 1)
-    a.sub("t1", "t0", "t1")                   # other
-    a.slli("t2", "t1", 6)
-    a.li("t0", GINFO0)
-    a.add("t2", "t2", "t0")
-    a.ld("t0", 24, "t2")
-    a.beqz("t0", "h2_make_other_current")     # other still live → hand off
-    a.li("t0", GUEST_RES)                     # both done: combined checksum
-    a.ld("t1", 0, "t0")
-    a.ld("t2", 8, "t0")
-    a.add("t1", "t1", "t2")
+    # scan for the next live guest (same round-robin order as the timer)
+    a.li("t6", SCHED_CUR)
+    a.ld("t0", 0, "t6")                       # cur
+    a.ld("t1", 24, "t6")                      # n
+    a.mv("t2", "t0")
+    a.label("h2_exit_scan")
+    a.addi("t2", "t2", 1)
+    a.blt("t2", "t1", "h2_exit_ck")
+    a.li("t2", 0)
+    a.label("h2_exit_ck")
+    a.beq("t2", "t0", "h2_all_done")          # full circle → fleet done
+    a.slli("t3", "t2", 6)
+    a.li("t6", lay.ginfo0)
+    a.add("t3", "t3", "t6")
+    a.ld("t3", 24, "t3")
+    a.bnez("t3", "h2_exit_scan")
+    a.j("h2_switch_to")                       # hand off (no save: cur done)
+
+    a.label("h2_all_done")                    # combined checksum → DONE
+    a.li("t0", lay.guest_res)
+    a.li("t1", n)
+    a.li("t2", 0)                             # acc
+    a.li("t3", 0)                             # i
+    a.label("h2_sum")
+    a.slli("t4", "t3", 3)
+    a.add("t4", "t4", "t0")
+    a.ld("t4", 0, "t4")
+    a.add("t2", "t2", "t4")
+    a.addi("t3", "t3", 1)
+    a.blt("t3", "t1", "h2_sum")
     a.li("t0", MMIO_DONE)
-    a.sd("t1", 0, "t0")
+    a.sd("t2", 0, "t0")
     a.label("h2_spin2")
     a.j("h2_spin2")
     assert a.pc <= SCHED_CUR, hex(a.pc)
@@ -1388,18 +1514,23 @@ class _GuestWindow:
         self.store64(table_base + idx * 8, self.pte(child_pa, PTE_V))
 
 
-def build_image_2guest(wl_a: Workload, wl_b: Workload,
-                       timeslice: int = DEFAULT_TIMESLICE) -> np.ndarray:
-    """Bootable image running TWO guest VMs per hart under the preemptive
-    scheduler: M firmware → HS scheduler-hypervisor → {VS guest A, VS guest
-    B} round-robin on timer interrupts.  Each guest gets the standard guest
+def build_image_nguest(workloads, timeslice: int = DEFAULT_TIMESLICE
+                       ) -> np.ndarray:
+    """Bootable image running N guest VMs per hart under the preemptive
+    scheduler: M firmware → HS scheduler-hypervisor → N VS guests
+    round-robin on timer interrupts.  Each guest gets the standard guest
     system image (kernel + workload + VS-stage tables) inside its own
-    host-physical window, and a private demand-populated G-stage set."""
-    img = Image(MEM_WORDS)
-    img.place_code(M_BOOT, _m_firmware(native=False).assemble())
-    img.place_code(HS_ENTRY, _scheduler_hypervisor(timeslice).assemble())
-    for i, wl in enumerate((wl_a, wl_b)):
-        win = _GuestWindow(img, PB[i])
+    host-physical window, and a private demand-populated G-stage set.  The
+    image size grows with N (`sched_layout(n).mem_words`)."""
+    wls = list(workloads)
+    lay = sched_layout(len(wls))
+    img = Image(lay.mem_words)
+    img.place_code(M_BOOT, _m_firmware(native=False,
+                                       counteren=True).assemble())
+    img.place_code(HS_ENTRY,
+                   _scheduler_hypervisor(timeslice, n=len(wls)).assemble())
+    for i, wl in enumerate(wls):
+        win = _GuestWindow(img, lay.win[i])
         kern = _kernel(native=False)
         w = Asm(WORKLOAD)
         wl.asm(w)
@@ -1410,9 +1541,15 @@ def build_image_2guest(wl_a: Workload, wl_b: Workload,
         _build_kernel_pts(win, P_KERN)
         # G-stage skeleton: non-leaf links only — every leaf is mapped on
         # demand by the scheduler, with the window offset applied
-        img.link(G2_L2[i], 0, G2_L1[i])
-        img.link(G2_L1[i], 0, G2_L0[i])
+        img.link(lay.g_l2[i], 0, lay.g_l1[i])
+        img.link(lay.g_l1[i], 0, lay.g_l0[i])
     return img.mem
+
+
+def build_image_2guest(wl_a: Workload, wl_b: Workload,
+                       timeslice: int = DEFAULT_TIMESLICE) -> np.ndarray:
+    """Legacy 2-guest entry point — thin wrapper over the N-guest builder."""
+    return build_image_nguest((wl_a, wl_b), timeslice=timeslice)
 
 
 def boot_state(workload: Workload, guest: bool):

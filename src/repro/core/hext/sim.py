@@ -186,18 +186,18 @@ class HartState:
             return st.with_mem(jnp.asarray(image))
 
     @classmethod
-    def boot_preemptive(cls, workload_a, workload_b,
+    def boot_preemptive(cls, *workloads,
                         timeslice: Optional[int] = None) -> "HartState":
-        """State with a 2-guest preemptive system image loaded: M firmware →
-        HS scheduler-hypervisor → two VS guests round-robined on timer
-        interrupts every `timeslice` ticks (DESIGN.md §2c)."""
+        """State with an N-guest preemptive system image loaded: M firmware
+        → HS scheduler-hypervisor → N VS guests round-robined on timer
+        interrupts every `timeslice` ticks (DESIGN.md §2c).  Memory is
+        sized per N (`programs.sched_layout`)."""
         from repro.core.hext import programs
         ts = programs.DEFAULT_TIMESLICE if timeslice is None else \
             int(timeslice)
-        image = programs.build_image_2guest(workload_a, workload_b,
-                                            timeslice=ts)
+        image = programs.build_image_nguest(workloads, timeslice=ts)
         with _x64():
-            st = cls.fresh(programs.MEM_WORDS)
+            st = cls.fresh(int(image.shape[0]))
             return st.with_mem(jnp.asarray(image))
 
     # -- raw-dict bridge (legacy ISA-core layout) ---------------------------
@@ -318,22 +318,22 @@ def run_on_device(state: HartState, max_ticks: int, chunk: int = 4096,
 class HartSpec:
     """What one fleet slot is running (for labels and golden checks).
 
-    A preemptive 2-guest slot carries both workloads (``workload`` is guest
-    A, ``workload_b`` guest B) and the scheduler timeslice."""
+    A preemptive slot carries the full guest tuple in ``guests`` (N ≥ 1;
+    ``workload`` aliases guest 0) and the scheduler timeslice."""
     workload: Optional[Any]
     guest: bool
     name: str
-    workload_b: Optional[Any] = None
+    guests: Optional[tuple] = None
     timeslice: int = 0
 
     @property
     def preemptive(self) -> bool:
-        return self.workload_b is not None
+        return self.guests is not None
 
     @property
     def label(self) -> str:
         if self.preemptive:
-            return f"{self.name}/2guest-preempt"
+            return f"{self.name}/{len(self.guests)}guest-preempt"
         return f"{self.name}/{'guest' if self.guest else 'native'}"
 
 
@@ -366,37 +366,39 @@ class Fleet:
         ``Fleet.boot(wls * 2, guest=[False] * 9 + [True] * 9)`` is the
         paper's native-vs-VM matrix).
 
-        ``guests_per_hart=2`` boots the preemptive multi-guest images
-        instead: each slot runs TWO guest VMs under the HS scheduler,
-        round-robin every ``timeslice`` ticks.  A slot entry may be a
-        single workload (both guests run it) or an ``(a, b)`` pair.
+        ``guests_per_hart=N`` (N ≥ 2, or N=1 with an explicit
+        ``timeslice``) boots the preemptive multi-guest images instead:
+        each slot runs N guest VMs under the HS scheduler, round-robin
+        every ``timeslice`` ticks.  A slot entry may be a single workload
+        (all N guests run it) or a length-N tuple of workloads
+        (heterogeneous tenants).
         """
         wls = list(workloads) if isinstance(workloads, (list, tuple)) \
             else [workloads]
-        if guests_per_hart == 2:
+        n = int(guests_per_hart)
+        if n < 1:
+            raise ValueError(f"guests_per_hart must be >= 1, got {n}")
+        if n >= 2 or timeslice is not None:
             if guest is not False:
                 raise ValueError(
-                    "guest= does not apply with guests_per_hart=2 "
-                    "(every slot runs two VS guests)")
+                    "guest= does not apply with a preemptive boot "
+                    "(every slot runs VS guests under the scheduler)")
             from repro.core.hext import programs
             ts = programs.DEFAULT_TIMESLICE if timeslice is None else \
                 int(timeslice)
-            pairs = []
+            groups = []
             for i, w in enumerate(wls):
-                pair = tuple(w) if isinstance(w, (tuple, list)) else (w, w)
-                if len(pair) != 2:
+                grp = tuple(w) if isinstance(w, (tuple, list)) else (w,) * n
+                if len(grp) != n:
                     raise ValueError(
-                        f"slot {i}: expected a workload or an (a, b) pair, "
-                        f"got {len(pair)} entries")
-                pairs.append(pair)
-            specs = [HartSpec(a, True, f"{a.name}+{b.name}", workload_b=b,
-                              timeslice=ts) for a, b in pairs]
-            states = [HartState.boot_preemptive(a, b, timeslice=ts)
-                      for a, b in pairs]
+                        f"slot {i}: expected a workload or a length-{n} "
+                        f"tuple, got {len(grp)} entries")
+                groups.append(grp)
+            specs = [HartSpec(g[0], True, "+".join(w.name for w in g),
+                              guests=g, timeslice=ts) for g in groups]
+            states = [HartState.boot_preemptive(*g, timeslice=ts)
+                      for g in groups]
             return cls(cls._stack(states), specs)
-        if guests_per_hart != 1:
-            raise ValueError(f"guests_per_hart must be 1 or 2, "
-                             f"got {guests_per_hart}")
         guests = list(guest) if isinstance(guest, (list, tuple)) \
             else [bool(guest)] * len(wls)
         if len(guests) != len(wls):
@@ -473,25 +475,31 @@ class Fleet:
 
     def _preempt_entry(self, i: int, spec: HartSpec,
                        c: Counters) -> Dict[str, Any]:
-        """Report entry for a 2-guest slot: per-guest checksum mailboxes are
-        read straight from the hart's memory (the HS scheduler records each
-        guest's result before combining them into the exit code)."""
+        """Report entry for an N-guest slot: per-guest checksum mailboxes
+        are read straight from the hart's memory (the HS scheduler records
+        each guest's result before combining them into the exit code)."""
         from repro.core.hext import programs
+        n = len(spec.guests)
+        lay = programs.sched_layout(n)
         with _x64():
-            res_w = programs.GUEST_RES // 8
-            ck_a = int(self._harts.mem[i, res_w]) & MASK64
-            ck_b = int(self._harts.mem[i, res_w + 1]) & MASK64
-        ga = int(spec.workload.golden()) & MASK64
-        gb = int(spec.workload_b.golden()) & MASK64
+            res_w = lay.guest_res // 8
+            cks = [int(self._harts.mem[i, res_w + k]) & MASK64
+                   for k in range(n)]
+        goldens = [int(w.golden()) & MASK64 for w in spec.guests]
+        oks = [ck == g for ck, g in zip(cks, goldens)]
+        total = sum(goldens) & MASK64
         entry = c.to_dict()
         entry.update({
-            "golden": (ga + gb) & MASK64,
-            "checksum_a": ck_a, "checksum_b": ck_b,
-            "ok_a": ck_a == ga, "ok_b": ck_b == gb,
-            "ok": bool(c.done) and ck_a == ga and ck_b == gb
-                  and c.ok(ga + gb),
+            "golden": total,
+            "guests": n,
+            "checksums": cks,
+            "ok_guests": oks,
+            "ok": bool(c.done) and all(oks) and c.ok(total),
             "timeslice": spec.timeslice,
         })
+        if n == 2:       # legacy 2-guest report keys
+            entry.update({"checksum_a": cks[0], "checksum_b": cks[1],
+                          "ok_a": oks[0], "ok_b": oks[1]})
         return entry
 
     def report(self) -> Dict[str, Dict[str, Any]]:

@@ -56,7 +56,20 @@ def _u(x):
 
 
 def _read64(mem, pa):
+    # NOTE: the wrapped index is only a safe-indexing device for traced
+    # code; a PA beyond memory raises an access fault in the walker
+    # (`_acc_cause`) and at the final access, so the wrapped value is never
+    # architecturally visible.
     return mem[(pa >> _u(3)).astype(jnp.int32) % mem.shape[0]]
+
+
+def _acc_cause(acc):
+    """Access-fault cause for an access type (PMA-style fault: the PA does
+    not exist).  Faults on implicit PTE fetches report the cause of the
+    *original* access type, like page faults do."""
+    return _u(jnp.where(acc == ACC_R, C.EXC_LACCESS,
+                        jnp.where(acc == ACC_W, C.EXC_SACCESS,
+                                  C.EXC_IACCESS)))
 
 
 def _pf_cause(acc, guest):
@@ -124,6 +137,10 @@ def _walk(mem, root_pa, vpn2_bits, va, acc, priv, sum_bit, mxr, require_u,
             g_tval2 = xr.tval2
         else:
             pte_pa, g_fault, g_cause = pte_addr, jnp.zeros((), bool), _u(0)
+        # a PTE address beyond physical memory is an access fault, not a
+        # wrap-around into RAM (previously `_read64`'s modulo index aliased
+        # bogus walk addresses back into memory)
+        oob = pte_pa >= _u(mem.shape[0] * 8)
         pte = _read64(mem, pte_pa)
         valid = (pte & _u(PTE_V)) != 0
         # W=1,R=0 encodings are reserved in Sv39/Sv39x4 and must page-fault
@@ -137,8 +154,11 @@ def _walk(mem, root_pa, vpn2_bits, va, acc, priv, sum_bit, mxr, require_u,
         perm_ok = _leaf_ok(pte, acc, priv, sum_bit, mxr, require_u)
         this_fault_pte = ~valid | reserved
         leaf_fault = is_leaf & (~align_ok | ~perm_ok)
-        level_fault = jnp.where(g_fault, True, this_fault_pte | leaf_fault)
-        level_cause = jnp.where(g_fault, g_cause, _pf_cause(cause_acc, guest))
+        level_fault = jnp.where(g_fault, True,
+                                oob | this_fault_pte | leaf_fault)
+        level_cause = jnp.where(g_fault, g_cause,
+                                jnp.where(oob, _acc_cause(cause_acc),
+                                          _pf_cause(cause_acc, guest)))
         # leaf PA: ppn high bits + VA low bits per level
         mask_low = _u((1 << shift) - 1)
         leaf_pa = ((ppn << _u(PAGE_SHIFT)) & ~mask_low) | (va & mask_low)

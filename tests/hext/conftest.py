@@ -98,7 +98,13 @@ def enter_vs(a, entry, hedeleg=0, hideleg=0, vsatp=0, medeleg=0):
     """M-mode fragment: set up H regs and drop to VS at `entry`.
 
     medeleg defaults to 0 so every exception from the guest lands at the
-    M handler (where the tests capture mcause/mtval/mtval2/mtinst)."""
+    M handler (where the tests capture mcause/mtval/mtval2/mtinst).
+    Counter enables (mcounteren/hcounteren TM et al.) are opened so guest
+    `time` reads do not trap — tests for the counteren gating itself drive
+    `csr_read` directly."""
+    a.li("t0", 7)
+    a.csrw(0x306, "t0")                   # mcounteren: CY|TM|IR
+    a.csrw(0x606, "t0")                   # hcounteren
     if medeleg:
         a.li("t0", medeleg)
         a.csrw(0x302, "t0")               # medeleg

@@ -95,3 +95,46 @@ def test_hartstate_raw_round_trip():
     assert len(leaves1) == len(leaves2)
     for a, b in zip(leaves1, leaves2):
         assert a.shape == b.shape and a.dtype == b.dtype
+
+
+# ---------------------------------------------------------------------------
+# N-guest VMM smoke (quick CI): three tiny tenants under the scheduler
+# ---------------------------------------------------------------------------
+
+class _Const(programs.Workload):
+    """Trivial tenant returning a constant — boots the full VS kernel
+    (paging + demand faults) but finishes within a couple of timeslices,
+    keeping this in the quick (not slow) suite."""
+
+    def __init__(self, name, val):
+        self.name, self.val = name, val
+
+    def asm(self, a):
+        a.label("workload_entry")
+        a.li("a0", self.val)
+        a.ret()
+
+    def golden(self):
+        return self.val
+
+
+def test_three_guest_smoke():
+    trio = tuple(_Const(f"c{i}", 100 + i) for i in range(3))
+    fleet = Fleet.boot([trio], guests_per_hart=3, timeslice=100)
+    fleet.run(20000, chunk=512)
+    rep = fleet.report()["c0+c1+c2/3guest-preempt"]
+    assert rep["done"] and rep["ok"]
+    assert rep["guests"] == 3 and all(rep["ok_guests"])
+    assert rep["checksums"] == [100, 101, 102]   # per-guest mailboxes
+    assert rep["ctx_switches"] >= 2              # every tenant got the CPU
+    assert rep["int_by_level"][1] == rep["timer_irqs"]
+
+
+def test_preemptive_boot_rejects_mismatched_tuple_and_guest_flag():
+    trio = tuple(_Const(f"c{i}", i) for i in range(3))
+    with pytest.raises(ValueError):
+        Fleet.boot([trio], guests_per_hart=2)    # length-3 tuple for N=2
+    with pytest.raises(ValueError):
+        Fleet.boot([trio[0]], guests_per_hart=3, guest=True)
+    with pytest.raises(ValueError):
+        Fleet.boot([trio[0]], guests_per_hart=0)

@@ -8,8 +8,10 @@
 * stale-TLB cross-privilege regression (U reusing an S entry),
 * HLVX through an X-only G-stage page (asm-level counterpart of the unit
   test),
-* the preemptive 2-guest scheduler: golden checks, timer_irqs,
-  ctx_switches, and disarmed-timer counter parity.
+* the preemptive N-guest scheduler: golden checks, timer_irqs,
+  ctx_switches, disarmed-timer counter parity, the 2-guest column's
+  bit-parity with the committed benchmark JSON, an N=4 heterogeneous
+  golden run, and htimedelta-virtualized guest time across preemption.
 """
 import pytest
 
@@ -294,14 +296,18 @@ def test_scheduler_rejects_out_of_window_gpa():
     assert int(c.exit_code) == 0x10000
 
 
-def test_disarmed_timer_counter_parity():
-    """With no comparator armed, single-guest counters are bit-identical to
-    the pre-timer implementation (golden values recorded pre-PR)."""
+def _committed_benchmark():
     import json
     import pathlib
     ref_path = pathlib.Path(__file__).resolve().parents[2] / \
         "benchmarks" / "results" / "hext_runs.json"
-    ref = json.loads(ref_path.read_text())["workloads"]["crc32"]
+    return json.loads(ref_path.read_text())["workloads"]
+
+
+def test_disarmed_timer_counter_parity():
+    """With no comparator armed, single-guest counters are bit-identical to
+    the pre-timer implementation (golden values recorded pre-PR)."""
+    ref = _committed_benchmark()["crc32"]
     wl = programs.CRC32()
     fleet = Fleet.boot([wl, wl], guest=[False, True])
     fleet.run(30000, chunk=1024)
@@ -313,3 +319,97 @@ def test_disarmed_timer_counter_parity():
             assert got[key] == ref[mode][key], (mode, key)
         assert got["timer_irqs"] == 0
         assert got["ctx_switches"] == 0
+
+
+_PARITY_KEYS = ("instret", "instret_virt", "ticks", "exc_by_level",
+                "int_by_level", "pagefaults", "walks", "timer_irqs",
+                "ctx_switches", "checksum_a", "checksum_b", "golden")
+
+
+def test_two_guest_counters_match_committed_benchmark():
+    """The N-generalized scheduler at guests_per_hart=2 must stay
+    bit-identical to the committed benchmark JSON — the 2-guest column is
+    the regression oracle for the N-guest rewrite (counters are per-hart
+    and independent of fleet batching, so a single-slot fleet suffices)."""
+    ref = _committed_benchmark()["crc32"]["2guest-preempt"]
+    wl = programs.CRC32()
+    fleet = Fleet.boot([wl], guests_per_hart=2)   # DEFAULT_TIMESLICE
+    fleet.run(120000, chunk=1024)
+    got = fleet.report()["crc32+crc32/2guest-preempt"]
+    for key in _PARITY_KEYS:
+        assert got[key] == ref[key], key
+    assert got["ok"] and got["ok_a"] and got["ok_b"]
+
+
+def test_four_guest_e2e_golden():
+    """N=4 heterogeneous slot: all four tenants hit their goldens, HS takes
+    every scheduler tick, and preemption actually interleaves them."""
+    quad = (programs.SHA(), programs.FFT(), programs.CRC32(),
+            programs.BitCount())
+    fleet = Fleet.boot([quad], guests_per_hart=4, timeslice=300)
+    fleet.run(120000, chunk=2048)
+    rep = fleet.report()["sha+fft+crc32+bitcount/4guest-preempt"]
+    assert rep["done"] and rep["ok"]
+    assert rep["guests"] == 4 and all(rep["ok_guests"])
+    assert rep["ctx_switches"] >= 4               # every tenant got CPU time
+    assert rep["timer_irqs"] >= rep["ctx_switches"] - 3   # + exit handoffs
+    assert rep["int_by_level"][1] == rep["timer_irqs"]    # all STIs at HS
+    assert rep["instret"] > rep["instret_virt"] > 0
+
+
+class _TimerGuest(programs.Workload):
+    """Guest that sleeps WAIT ticks of its OWN clock on vstimecmp and
+    returns the virtually-elapsed time.  Under a correct htimedelta the
+    returned value is ≈ WAIT even though the guest was descheduled for
+    whole timeslices while waiting."""
+    name = "timerguest"
+    WAIT = 400
+    HANDLER = programs.WORKLOAD + 0x100
+
+    def asm(self, a):
+        a.label("workload_entry")
+        a.li("t0", self.HANDLER)
+        a.csrw(0x105, "t0")                  # stvec → vstvec (V=1 swap)
+        a.li("t0", C.IP_STIP)
+        a.csrrs(0, 0x104, "t0")              # sie → vsie (VSTIE via shift)
+        a.li("t0", C.MSTATUS_SIE)
+        a.csrrs(0, 0x100, "t0")              # sstatus.SIE → vsstatus.SIE
+        a.csrr("s0", 0xC01)                  # t_start (guest virtual time)
+        a.addi("t0", "s0", self.WAIT)
+        a.csrw(0x14D, "t0")                  # stimecmp → vstimecmp (swap)
+        a.li("s1", 0)
+        a.label("tg_wait")
+        a.beqz("s1", "tg_wait")              # handler sets s1
+        a.csrr("t0", 0xC01)                  # t_end (guest virtual time)
+        a.sub("a0", "t0", "s0")              # elapsed in guest time
+        a.ret()
+        while a.pc < self.HANDLER:
+            a.nop()
+        # VSTI handler: flag completion, disarm, mask VSTIE, resume
+        a.li("s1", 1)
+        a.li("t0", -1)
+        a.csrw(0x14D, "t0")                  # vstimecmp ← disarmed
+        a.li("t0", C.IP_STIP)
+        a.csrrc(0, 0x104, "t0")              # vsie.STIE off
+        a.sret()
+
+    def golden(self):
+        return 0                             # checked by range, not golden
+
+
+def test_htimedelta_virtualizes_guest_time_across_preemption():
+    """The timer guest waits 400 ticks of its own clock while a busy
+    sibling steals whole 150-tick slices.  With htimedelta maintained by
+    the scheduler the guest-observed elapsed time stays ≈ WAIT; without it
+    the guest would observe every descheduled tick as well (≥ WAIT + a
+    timeslice per preemption)."""
+    tg = _TimerGuest()
+    fleet = Fleet.boot([(tg, programs.SHA())], guests_per_hart=2,
+                       timeslice=150)
+    fleet.run(60000, chunk=1024)
+    rep = fleet.report()["timerguest+sha/2guest-preempt"]
+    assert rep["done"]
+    assert rep["ok_guests"][1]                   # sha still hits its golden
+    elapsed = rep["checksums"][0]
+    assert rep["ctx_switches"] >= 3              # the wait spanned slices
+    assert _TimerGuest.WAIT <= elapsed < _TimerGuest.WAIT + 80, elapsed

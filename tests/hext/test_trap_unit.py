@@ -8,6 +8,15 @@
 * reserved PTE encodings (W=1,R=0) page-faulting at both stages,
 * HLVX carrying its execute-permission override through the G-stage.
 
+Plus the ISSUE 3 conformance satellites:
+
+* out-of-range physical addresses raising access faults (walk PTE
+  fetches and final accesses) instead of wrapping back into RAM,
+* ``htimedelta`` shifting the guest's ``time`` view and the vstimecmp
+  comparison,
+* the counter-enable (TM bit) trap matrix for ``time`` reads,
+* the N-guest scheduler memory layout invariants.
+
 These paths were previously exercised only indirectly through workloads.
 """
 import jax
@@ -17,9 +26,12 @@ import pytest
 
 from repro.core.hext import csr as C
 from repro.core.hext import machine
+from repro.core.hext import programs
 from repro.core.hext import tlb as TLB
 from repro.core.hext import translate as X
 from repro.core.hext import trap as TR
+from tests.hext.conftest import (build_vs_identity, exit_with,
+                                 m_handler_capture, prologue, result, run_asm)
 
 
 def _csrs(**kw):
@@ -394,3 +406,308 @@ class TestHlvxGStage:
                              X.ACC_R, force_virt=True, hlvx=True)
             assert bool(xr.fault) and bool(xr.implicit)
             assert int(xr.cause) == C.EXC_LGUEST_PAGE_FAULT   # not I-GPF
+
+
+# ---------------------------------------------------------------------------
+# out-of-range physical addresses: access faults, not modulo wrap-around
+# ---------------------------------------------------------------------------
+
+class TestOobPaAccessFault:
+    """A PA beyond physical memory previously aliased back into RAM via
+    `% mem.shape[0]`; it must raise the access fault of the original
+    access type instead — during walks and on the final access."""
+
+    def test_walk_pte_beyond_memory_faults_per_access_type(self):
+        with jax.experimental.enable_x64():
+            mem = jnp.zeros((1 << 12,), jnp.uint64)       # 32 KiB
+            # satp root far beyond memory: the level-2 PTE fetch is OOB
+            csrs = _csrs(satp=SV39 | ((1 << 20) >> 12))
+            for acc, cause in ((X.ACC_R, C.EXC_LACCESS),
+                               (X.ACC_W, C.EXC_SACCESS),
+                               (X.ACC_X, C.EXC_IACCESS)):
+                xr = X.translate(mem, csrs, jnp.asarray(1, jnp.int32),
+                                 jnp.asarray(False, bool),
+                                 jnp.uint64(0x5000), acc)
+                assert bool(xr.fault)
+                assert int(xr.cause) == cause
+
+    def test_walk_inner_pte_beyond_memory_faults(self):
+        """An in-range root whose next-level pointer leaves memory must
+        fault at that level, not wrap and keep walking."""
+        with jax.experimental.enable_x64():
+            mem = _mem_with({0x1000: _pte(1 << 21, X.PTE_V)})  # L2 → OOB L1
+            csrs = _csrs(satp=SV39 | (0x1000 >> 12))
+            xr = X.translate(jnp.asarray(mem), csrs,
+                             jnp.asarray(1, jnp.int32),
+                             jnp.asarray(False, bool), jnp.uint64(0x5000),
+                             X.ACC_R)
+            assert bool(xr.fault)
+            assert int(xr.cause) == C.EXC_LACCESS
+
+    def test_gstage_walk_pte_beyond_memory_faults(self):
+        """G-stage PTE fetches are bounds-checked too — and report the
+        access-fault cause, not a guest-page-fault."""
+        with jax.experimental.enable_x64():
+            mem = jnp.zeros((1 << 12,), jnp.uint64)
+            hgatp = jnp.uint64(SV39 | ((1 << 20) >> 12))
+            xr = X.g_translate(mem, hgatp, jnp.uint64(0x5000),
+                               jnp.uint64(X.ACC_R), jnp.asarray(False, bool))
+            assert bool(xr.fault)
+            assert int(xr.cause) == C.EXC_LACCESS
+
+    def test_final_load_store_beyond_memory_fault_e2e(self):
+        """M-mode load/store of a PA past RAM (and not a decoded MMIO
+        register) raises the load/store access fault."""
+        OOB = programs.MEM_WORDS * 8 + 0x8000
+
+        def build_load(a, img):
+            prologue(a)
+            a.li("t0", OOB)
+            a.ld("a0", 0, "t0")
+            a.nop()
+            m_handler_capture(a)
+
+        st = run_asm(build_load, ticks=200)
+        assert result(st) == C.EXC_LACCESS
+        assert csr_of_mtval(st) == OOB
+
+        def build_store(a, img):
+            prologue(a)
+            a.li("t0", OOB)
+            a.sd("t0", 0, "t0")
+            a.nop()
+            m_handler_capture(a)
+
+        st = run_asm(build_store, ticks=200)
+        assert result(st) == C.EXC_SACCESS
+
+    def test_load_from_write_only_mmio_faults_e2e(self):
+        """The console/done/ctxsw MMIO registers have no read decode — a
+        load from them must access-fault, not wrap into RAM (the CLINT
+        mtime/mtimecmp pair stays readable)."""
+        from repro.core.hext import isa
+
+        def build(a, img):
+            prologue(a)
+            a.li("t0", isa.MMIO_CONSOLE)
+            a.ld("a0", 0, "t0")
+            a.nop()
+            m_handler_capture(a)
+
+        st = run_asm(build, ticks=200)
+        assert result(st) == C.EXC_LACCESS
+
+        def build_ok(a, img):
+            prologue(a)
+            a.li("t0", isa.MMIO_MTIME)
+            a.ld("a0", 0, "t0")              # readable: raw mtime
+            exit_with(a, "a0")
+            m_handler_capture(a)
+
+        st = run_asm(build_ok, ticks=200)
+        assert st.counters.exc_by_level.tolist() == [0, 0, 0]   # no trap
+        assert result(st) > 0                                   # raw mtime
+
+    def test_final_fetch_beyond_memory_faults_e2e(self):
+        OOB = programs.MEM_WORDS * 8 + 0x8000
+
+        def build(a, img):
+            prologue(a)
+            a.li("t0", OOB)
+            a.jalr("zero", 0, "t0")
+            m_handler_capture(a)
+
+        st = run_asm(build, ticks=200)
+        assert result(st) == C.EXC_IACCESS
+        assert csr_of_mtval(st) == OOB        # tval = faulting fetch address
+        assert int(st.csrs[C.R_MEPC]) == OOB
+
+    def test_translated_load_to_oob_pa_faults_e2e(self):
+        """S-mode VA whose leaf PTE points past RAM: translation succeeds,
+        the final access faults (previously it wrapped into RAM)."""
+        def build(a, img):
+            prologue(a)
+            build_vs_identity(img)
+            # VA 0x5000 → PA 1 MiB (beyond the 256 KiB image)
+            img.map_page(programs.S_L0, 0x5000, 1 << 20, programs.P_KERN)
+            a.li("t0", 1 << 11)
+            a.csrrs(0, 0x300, "t0")           # MPP=S
+            a.li("t0", 0x400)
+            a.csrw(0x341, "t0")
+            a.mret()
+            while a.pc < 0x400:
+                a.nop()
+            a.li("t0", (8 << 60) | (programs.S_L2 >> 12))
+            a.csrw(0x180, "t0")               # satp
+            a.sfence_vma()
+            a.li("t1", 0x5000)
+            a.ld("a0", 0, "t1")
+            a.nop()
+            m_handler_capture(a)
+
+        st = run_asm(build, ticks=400)
+        assert result(st) == C.EXC_LACCESS
+        assert csr_of_mtval(st) == 0x5000     # tval = faulting VA
+
+
+def csr_of_mtval(st):
+    return int(st.csrs[C.R_MTVAL])
+
+
+# ---------------------------------------------------------------------------
+# htimedelta: the guest time base (CSR 0x605)
+# ---------------------------------------------------------------------------
+
+class TestHtimedelta:
+    M64 = (1 << 64) - 1
+
+    def _open_counters(self, c):
+        return c.at[C.R_MCOUNTEREN].set(jnp.uint64(7)).at[
+            C.R_HCOUNTEREN].set(jnp.uint64(7)).at[
+            C.R_SCOUNTEREN].set(jnp.uint64(7))
+
+    def _time(self, c, priv, virt):
+        with jax.experimental.enable_x64():
+            v, ok, vinst = C.csr_read(c, jnp.asarray(0xC01, jnp.int32),
+                                      jnp.asarray(priv, jnp.int32),
+                                      jnp.asarray(virt, bool))
+            return int(v), bool(ok), bool(vinst)
+
+    def test_time_shifted_under_v1_only(self):
+        with jax.experimental.enable_x64():
+            c = self._open_counters(_csrs(mtime=1000))
+            c = c.at[C.R_HTIMEDELTA].set(jnp.uint64(self.M64 - 99))  # -100
+            assert self._time(c, 1, False)[0] == 1000    # HS: raw mtime
+            assert self._time(c, 1, True)[0] == 900      # VS: mtime + delta
+            assert self._time(c, 0, True)[0] == 900      # VU too
+
+    def test_write_preserved_from_hs_vinst_from_vs(self):
+        with jax.experimental.enable_x64():
+            c = _csrs()
+            new, ok, vinst = C.csr_write(
+                c, jnp.asarray(0x605, jnp.int32), jnp.uint64(0x1234),
+                jnp.asarray(1, jnp.int32), jnp.asarray(False, bool))
+            assert bool(ok) and not bool(vinst)
+            assert int(new[C.R_HTIMEDELTA]) == 0x1234
+            rd, ok, _ = (lambda t: (int(t[0]), bool(t[1]), bool(t[2])))(
+                C.csr_read(new, jnp.asarray(0x605, jnp.int32),
+                           jnp.asarray(1, jnp.int32),
+                           jnp.asarray(False, bool)))
+            assert ok and rd == 0x1234
+            # VS access to the H-level CSR → virtual instruction
+            _, ok, vinst = C.csr_write(
+                c, jnp.asarray(0x605, jnp.int32), jnp.uint64(1),
+                jnp.asarray(1, jnp.int32), jnp.asarray(True, bool))
+            assert not bool(ok) and bool(vinst)
+
+    def test_vstimecmp_compares_guest_time(self):
+        """VSTIP must arm on mtime + htimedelta: with delta = -30 and
+        vstimecmp = 50, the comparator fires at mtime 80, not 50."""
+        with jax.experimental.enable_x64():
+            c = _csrs(vstimecmp=50, mtime=49)
+            c = c.at[C.R_HTIMEDELTA].set(jnp.uint64(self.M64 - 29))  # -30
+            c = machine._advance_timers(c)               # mtime 50: vs 20
+            assert int(c[C.R_MIP]) & C.IP_VSTIP == 0
+            c = c.at[C.R_MTIME].set(jnp.uint64(79))
+            c = machine._advance_timers(c)               # mtime 80: vs 50
+            assert int(c[C.R_MIP]) & C.IP_VSTIP
+
+
+# ---------------------------------------------------------------------------
+# counter-enable (TM) gating of `time` reads
+# ---------------------------------------------------------------------------
+
+class TestTimeCounterEnable:
+    def _rd(self, c, priv, virt):
+        with jax.experimental.enable_x64():
+            _, ok, vinst = C.csr_read(c, jnp.asarray(0xC01, jnp.int32),
+                                      jnp.asarray(priv, jnp.int32),
+                                      jnp.asarray(virt, bool))
+            return bool(ok), bool(vinst)
+
+    def _c(self, m=0, h=0, s=0):
+        with jax.experimental.enable_x64():
+            c = C.init_csrs()
+            return c.at[C.R_MCOUNTEREN].set(jnp.uint64(m)).at[
+                C.R_HCOUNTEREN].set(jnp.uint64(h)).at[
+                C.R_SCOUNTEREN].set(jnp.uint64(s))
+
+    TM = C.COUNTEREN_TM
+
+    def test_m_mode_always_reads(self):
+        assert self._rd(self._c(), 3, False) == (True, False)
+
+    def test_s_mode_gated_by_mcounteren(self):
+        assert self._rd(self._c(), 1, False) == (False, False)   # illegal
+        assert self._rd(self._c(m=self.TM), 1, False) == (True, False)
+
+    def test_u_mode_needs_mcounteren_and_scounteren(self):
+        assert self._rd(self._c(m=self.TM), 0, False) == (False, False)
+        assert self._rd(self._c(m=self.TM, s=self.TM), 0, False) == \
+            (True, False)
+
+    def test_vs_matrix(self):
+        # mcounteren clear → illegal even under V=1
+        assert self._rd(self._c(), 1, True) == (False, False)
+        # mcounteren set, hcounteren clear → virtual instruction
+        assert self._rd(self._c(m=self.TM), 1, True) == (False, True)
+        assert self._rd(self._c(m=self.TM, h=self.TM), 1, True) == \
+            (True, False)
+
+    def test_vu_additionally_needs_scounteren(self):
+        assert self._rd(self._c(m=self.TM, h=self.TM), 0, True) == \
+            (False, True)
+        assert self._rd(self._c(m=self.TM, h=self.TM, s=self.TM),
+                        0, True) == (True, False)
+
+
+# ---------------------------------------------------------------------------
+# N-guest scheduler layout invariants
+# ---------------------------------------------------------------------------
+
+class TestSchedLayout:
+    def test_n2_layout_is_the_legacy_layout(self):
+        lay = programs.sched_layout(2)
+        assert lay.g_l2 == programs.G2_L2
+        assert lay.g_l1 == programs.G2_L1
+        assert lay.g_l0 == programs.G2_L0
+        assert lay.win == programs.PB
+        assert lay.guest_res == programs.GUEST_RES
+        assert lay.ctx0 == programs.CTX0
+        assert lay.mem_words == programs.MEM_WORDS
+
+    def test_layout_invariants_all_n(self):
+        for n in range(1, programs.MAX_GUESTS + 1):
+            lay = programs.sched_layout(n)
+            # Sv39x4 roots are 16K-aligned, 16 KiB wide, non-overlapping
+            for l2, l1, l0 in zip(lay.g_l2, lay.g_l1, lay.g_l0):
+                assert l2 % 0x4000 == 0
+                assert l1 == l2 + 0x4000 and l0 == l2 + 0x5000
+            # scheduler state fits below the G-stage tables
+            assert lay.ctx0 + n * programs.CTX_SIZE <= lay.g_l2[0]
+            assert lay.guest_res + 8 * n <= lay.ctx0
+            assert lay.ginfo0 + n * programs.GINFO_SIZE <= lay.guest_res
+            # windows sit above every table block and tile contiguously
+            tab_end = lay.g_l2[-1] + programs.GTAB_STRIDE
+            assert lay.win[0] >= tab_end
+            for i, w in enumerate(lay.win):
+                assert w == lay.win[0] + i * programs.GUEST_WIN
+            assert lay.mem_words * 8 == lay.win[-1] + programs.GUEST_WIN
+
+    def test_out_of_range_n_rejected(self):
+        with pytest.raises(ValueError):
+            programs.sched_layout(0)
+        with pytest.raises(ValueError):
+            programs.sched_layout(programs.MAX_GUESTS + 1)
+
+    def test_scheduler_assembles_for_all_n(self):
+        """Boot code must fit below HS2_HANDLER and the handler below
+        SCHED_CUR for every supported N (the asserts fire at build time)."""
+        for n in range(1, programs.MAX_GUESTS + 1):
+            programs._scheduler_hypervisor(500, n=n).assemble()
+
+    def test_max_guests_image_builds(self):
+        img = programs.build_image_nguest(
+            [programs.SHA()] * programs.MAX_GUESTS)
+        assert img.shape[0] == programs.sched_layout(
+            programs.MAX_GUESTS).mem_words
