@@ -7,7 +7,7 @@ inside a single jitted run: a `lax.while_loop` over chunked vmapped scans
 that exits on-device as soon as every machine is done.  Per-machine
 architectural counters come back as typed `Counters` records.
 
-Run with the package on the path (see DESIGN.md §5):
+Run with the package on the path (see DESIGN.md §6):
 
     PYTHONPATH=src python examples/batched_fleet_sim.py
 """

@@ -1,7 +1,7 @@
 """Quickstart: boot a guest VM under the xvisor-lite hypervisor and compare
 it against native execution — the paper's experiment in 30 lines.
 
-Run with the package on the path (see DESIGN.md §5):
+Run with the package on the path (see DESIGN.md §6):
 
     PYTHONPATH=src python examples/quickstart.py [workload]
 """

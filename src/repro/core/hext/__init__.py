@@ -1,3 +1,6 @@
-from repro.core.hext import (csr, isa, machine, programs, sim,  # noqa: F401
-                             translate, trap)
+# NOTE: `torture` is intentionally not imported eagerly — it is run as
+# `python -m repro.core.hext.torture`, and an eager package import would
+# double-execute the module under runpy.
+from repro.core.hext import (csr, isa, machine, oracle,  # noqa: F401
+                             programs, sim, translate, trap)
 from repro.core.hext.sim import Counters, Fleet, HartState  # noqa: F401

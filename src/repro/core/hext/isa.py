@@ -290,7 +290,11 @@ def execute(state, instr):
     orv = rv1 | alu_b
     andv = rv1 & alu_b
     arith_sub = (is_op & (f7 == _u(0x20)))
-    sr_arith = f7 == _u(0x20)
+    # OP-IMM-64 srai carries shamt[5] in instr bit 25, so its funct7 is
+    # 0x20 OR 0x21 — decode the arithmetic bit from funct6 there (an exact
+    # 0x20 match silently turned `srai rd, rs, 32..63` into srli)
+    sr_arith = jnp.where(is_opi, (f7 & _u(0x7E)) == _u(0x20),
+                         f7 == _u(0x20))
     r64 = jnp.where(f3 == 0, jnp.where(arith_sub, subv, addv),
           jnp.where(f3 == 1, sll,
           jnp.where(f3 == 2, sltv,
@@ -317,8 +321,10 @@ def execute(state, instr):
     srl32 = sext((a32 & _u(0xFFFFFFFF)) >> sh5, 32)
     sra32 = sext(_u(_i(sext(rv1, 32)) >> sh5.astype(I64)), 32)
     mul32 = sext(a32 * b32, 32)
-    div32 = sext(divs(a32, b32), 64)
-    div32 = sext(divs(sext(rv1, 32), sext(alu_b, 32)), 64)
+    # divw truncates THEN sign-extends from bit 31: the overflow quotient
+    # INT32_MIN / -1 = +2^31 must read back as sign-extended INT32_MIN
+    # (sext(..., 64) left it as 0x80000000)
+    div32 = sext(divs(sext(rv1, 32), sext(alu_b, 32)), 32)
     divu32 = jnp.where((alu_b & _u(0xFFFFFFFF)) == 0, ~_u(0),
                        sext((rv1 & _u(0xFFFFFFFF)) //
                             jnp.maximum(alu_b & _u(0xFFFFFFFF), _u(1)), 32))

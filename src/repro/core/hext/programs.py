@@ -59,11 +59,20 @@ class Asm:
         return self.base + 4 * len(self.words)
 
     def label(self, name: str):
+        assert name not in self.labels, f"duplicate label {name!r}"
         self.labels[name] = self.pc
         return self
 
     def emit(self, w):
         self.words.append(w)
+
+    def pad_to(self, addr: int):
+        """NOP-pad up to `addr` (section alignment for handlers/bodies);
+        asserts the current code has not already overrun it."""
+        assert self.pc <= addr, hex(self.pc)
+        while self.pc < addr:
+            self.nop()
+        return self
 
     def assemble(self) -> np.ndarray:
         out = []
@@ -453,9 +462,7 @@ def _m_firmware(native: bool, counteren: bool = False) -> Asm:
     a.csrw(0x341, "t0")                       # mepc
     a.mret()
     # M trap handler: ecall-from-S(9) → DONE(a0); anything else → DONE(cause)
-    assert a.pc <= M_HANDLER
-    while a.pc < M_HANDLER:
-        a.nop()
+    a.pad_to(M_HANDLER)
     a.label("m_handler")
     a.csrr("t0", 0x342)                       # mcause
     a.li("t1", 9)
@@ -498,9 +505,7 @@ def _hypervisor() -> Asm:
     a.csrw(0x141, "t0")                       # sepc → guest entry
     a.sret()                                  # enter VS
 
-    assert a.pc <= HS_HANDLER
-    while a.pc < HS_HANDLER:
-        a.nop()
+    a.pad_to(HS_HANDLER)
     # ---- HS trap handler ---------------------------------------------------
     a.label("hs_handler")
     # save (t6 first — it is the li-scratch and must survive nested traps)
@@ -634,9 +639,7 @@ def _scheduler_hypervisor(timeslice: int, n: int = 2) -> Asm:
     a.csrw(0x141, "t0")                       # sepc
     a.sret()
 
-    assert a.pc <= HS2_HANDLER, hex(a.pc)
-    while a.pc < HS2_HANDLER:
-        a.nop()
+    a.pad_to(HS2_HANDLER)
     # ---- scheduler trap handler --------------------------------------------
     a.label("h2_handler")
     a.csrw(0x140, "t6")                       # sscratch ← t6 (li scratch)
@@ -853,9 +856,7 @@ def _kernel(native: bool) -> Asm:
     a.label("k_spin")
     a.j("k_spin")
 
-    assert a.pc <= KERN_HANDLER, hex(a.pc)
-    while a.pc < KERN_HANDLER:
-        a.nop()
+    a.pad_to(KERN_HANDLER)
     # ---- S/VS page-fault handler: demand-map 4K identity page -------------
     a.label("k_handler")
     a.csrw(0x140, "t6")                       # sscratch (vsscratch when V=1)

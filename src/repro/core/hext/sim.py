@@ -420,12 +420,41 @@ class Fleet:
 
     @classmethod
     def from_images(cls, images: Sequence[Any],
-                    mem_words: int = _machine.DEFAULT_MEM_WORDS) -> "Fleet":
-        """Fleet of fresh harts, each booted from a raw uint64-word image."""
+                    mem_words: int = _machine.DEFAULT_MEM_WORDS,
+                    names: Optional[Sequence[str]] = None) -> "Fleet":
+        """Fleet of fresh harts, each booted from a raw uint64-word image
+        (shorter images are zero-padded; an oversized one is an error)."""
         with _x64():
-            states = [HartState.fresh(mem_words).or_image(img)
-                      for img in images]
-        return cls.from_states(states)
+            imgs = [jnp.asarray(im, U64) for im in images]
+            for i, im in enumerate(imgs):
+                if int(im.shape[0]) > mem_words:
+                    raise ValueError(
+                        f"image {i} has {int(im.shape[0])} words > "
+                        f"mem_words={mem_words}")
+            states = [HartState.fresh(mem_words).or_image(im)
+                      for im in imgs]
+        specs = None if names is None else \
+            [HartSpec(None, False, str(n)) for n in names]
+        return cls.from_states(states, specs)
+
+    @classmethod
+    def from_corpus(cls, images: Sequence[Any],
+                    names: Optional[Sequence[str]] = None,
+                    mem_words: Optional[int] = None) -> "Fleet":
+        """Batch a scenario corpus (possibly differently-sized images) as
+        ONE fleet: every image is zero-padded to a common word count so the
+        whole corpus traces to a single XLA executable — the batched-fuzz
+        mode of the torture harness (DESIGN.md §5).  ``mem_words`` defaults
+        to the largest image rounded up to a power of two, so corpora of
+        similar size reuse the compile cache across runs."""
+        if not len(images):
+            raise ValueError("from_corpus needs at least one image")
+        if mem_words is None:
+            m = max(len(im) for im in images)
+            mem_words = 1 << max(m - 1, 1).bit_length()
+        if names is None:
+            names = [f"case{i}" for i in range(len(images))]
+        return cls.from_images(images, mem_words, names=names)
 
     @staticmethod
     def _stack(states: Sequence[HartState]) -> HartState:

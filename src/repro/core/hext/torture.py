@@ -1,0 +1,705 @@
+"""Randomized differential conformance harness (DESIGN.md §5).
+
+RiescueC-style torture testing: a seeded generator emits randomized
+guest/hypervisor scenarios — random ALU/load/store/CSR/HLV-HSV bodies,
+random Sv39/Sv39x4 page-table shapes (reserved W=1/R=0 encodings, OOB
+ppns, misaligned superpages, dropped U/A/D bits), random privilege entry
+points (M/HS/VS/VU/S/U), random delegation masks, and random timer
+arming — each compiled to a bootable image with the ``programs`` Asm.
+
+Every scenario is self-terminating by construction: bodies are
+straight-line (forward branches only), every trap handler either exits
+through the DONE MMIO or ecalls its way down to the M handler, and the
+WARL delegation masks make ecall-S/ecall-M undelegable, so no handler
+chain can loop.  Pathological cases (WFI with nothing armed, wild jumps
+into self-modified code) are bounded by the tick budget — both models
+run the same budget, so even a non-terminating scenario is compared
+exactly.
+
+The whole corpus boots as ONE batched ``Fleet`` (images padded to a
+common memory size so XLA compiles a single executable — see the
+recompile pitfall in DESIGN.md §5) and is diffed hart-by-hart against
+the pure-Python oracle (``repro.core.hext.oracle``).
+
+Repro workflow::
+
+    PYTHONPATH=src python -m repro.core.hext.torture --seed S --count 256
+    PYTHONPATH=src python -m repro.core.hext.torture --seed S --case K -v
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.hext import csr as C
+from repro.core.hext import oracle
+from repro.core.hext.programs import (Asm, Image, G_L0, G_L1, G_L2,
+                                      S_L0, S_L1, S_L2, SATP_SV39,
+                                      PTE_V, PTE_R, PTE_W, PTE_X, PTE_U,
+                                      PTE_A, PTE_D, P_KERN, P_GUEST)
+
+# ---------------------------------------------------------------------------
+# scenario memory map (identity VA=GPA=PA; 128 KiB per scenario)
+# ---------------------------------------------------------------------------
+T_MEM_WORDS = 1 << 14          # 128 KiB — one XLA shape for every corpus
+T_MEM_BYTES = T_MEM_WORDS * 8
+TM_HANDLER = 0x0400            # M trap handler (capture + DONE exit)
+TS_HANDLER = 0x0600            # HS/S handler (log scause/stval/htval, ecall)
+TVS_HANDLER = 0x0800           # VS handler (log vscause/vstval, ecall)
+T_BODY = 0x1000                # randomized body
+T_LOG = 0x2000                 # handler fingerprint page (always mapped RW)
+T_DATA_PAGES = (0x3000, 0x4000, 0x5000, 0x6000, 0x7000)
+MMIO_DONE = 0x10000008
+
+DEFAULT_SEED = 2026
+MAX_TICKS = 1536               # 3 × CHUNK — both models run this exact budget
+CHUNK = 512
+
+MODES = ("M", "HS", "S", "U", "VS", "VU")
+
+_REGS = (1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 18, 19, 20,
+         28, 29, 30)
+
+# CSRs a body may freely read AND write (tvec/atp writes excluded: they can
+# redirect traps/translation at a pc the generator cannot see)
+_CSR_RW = (0x100, 0x104, 0x106, 0x140, 0x141, 0x142, 0x143, 0x144, 0x14D,
+           0x200, 0x204, 0x240, 0x241, 0x242, 0x243, 0x244, 0x24D,
+           0x300, 0x302, 0x303, 0x304, 0x306, 0x340, 0x341, 0x342, 0x343,
+           0x344, 0x34A, 0x34B, 0x600, 0x602, 0x603, 0x605, 0x606, 0x607,
+           0x643, 0x644, 0x645, 0x64A)
+# read-only pool (reads are interesting from every mode: priv/vinst/counteren
+# checks); includes tvec/atp regs whose *writes* are excluded above
+_CSR_RO = (0xC01, 0xE12, 0x301, 0x105, 0x205, 0x305, 0x180, 0x280, 0x680,
+           0x604)
+
+
+def repro_line(seed: int, case: int) -> str:
+    return (f"PYTHONPATH=src python -m repro.core.hext.torture "
+            f"--seed {seed} --case {case}")
+
+
+# ---------------------------------------------------------------------------
+# scenario generation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Scenario:
+    seed: int
+    case: int
+    image: np.ndarray
+    cfg: Dict
+
+    @property
+    def name(self) -> str:
+        return f"s{self.seed}c{self.case}"
+
+
+def _rand_u64(rng) -> int:
+    return int(rng.integers(0, 1 << 64, dtype=np.uint64))
+
+
+def _bits(rng, pool, p) -> int:
+    return sum(1 << b for b in pool if rng.random() < p)
+
+
+def _sample_cfg(rng) -> Dict:
+    mode = MODES[int(rng.integers(0, len(MODES)))]
+    virt = mode in ("VS", "VU")
+    user = mode in ("U", "VU")
+    cfg: Dict = {"mode": mode, "virt": virt, "user": user}
+
+    # translation regimes.  "broken" roots / misaligned superpages can make
+    # the S/VS handler unfetchable — the delegation masks below keep the
+    # resulting fetch faults at M so no trap chain can loop.
+    def stage():
+        r = rng.random()
+        if r < 0.40:
+            return {"on": False}
+        out = {"on": True, "root_oob": rng.random() < 0.04,
+               "superpage": None}
+        if rng.random() < 0.12:
+            out["superpage"] = "misaligned" if rng.random() < 0.3 \
+                else "aligned"
+        return out
+
+    cfg["satp"] = stage() if not virt else (
+        {"on": False} if rng.random() < 0.5
+        else {"on": True, "root_oob": False, "superpage": None})
+    # HS is the hypervisor regime: bias the guest stages ON so its
+    # HLV/HSV ops walk two stages; plain S is the pure-native supervisor
+    # (otherwise the two modes would sample identical distributions)
+    vsatp_p = {"HS": 0.8, "S": 0.1}.get(mode, 0.5)
+    hgatp_p = {"HS": 0.7, "S": 0.1}.get(mode, 0.4)
+    cfg["vsatp"] = stage() if virt else (
+        {"on": rng.random() < vsatp_p, "root_oob": False,
+         "superpage": None})
+    cfg["hgatp"] = stage() if (virt or rng.random() < hgatp_p) \
+        else {"on": False}
+    # Bias (not eliminate) broken G roots under V=1: a broken root makes
+    # the VS handler unfetchable, which is SAFE only because the
+    # hedeleg &= ~(1|1<<12) guard below forces the resulting guest
+    # handler-fetch faults to HS/M instead of looping at vstvec
+    if virt and cfg["hgatp"].get("root_oob"):
+        cfg["hgatp"]["root_oob"] = rng.random() < 0.5
+    cfg["g_drop_vs_tables"] = virt and rng.random() < 0.08
+
+    s_broken = cfg["satp"]["on"] and (
+        cfg["satp"]["root_oob"] or cfg["satp"]["superpage"] is not None)
+    vs_broken = cfg["vsatp"]["on"] and (
+        cfg["vsatp"].get("root_oob") or cfg["vsatp"].get("superpage"))
+    g_broken = cfg["hgatp"]["on"] and (
+        cfg["hgatp"].get("root_oob") or
+        cfg["hgatp"].get("superpage") == "misaligned" or
+        cfg["g_drop_vs_tables"])
+
+    medeleg = _bits(rng, (0, 1, 2, 3, 4, 5, 6, 7, 8, 12, 13, 15,
+                          20, 21, 22, 23, 10), 0.35)
+    if s_broken or (cfg["satp"]["on"] and user):
+        # an S-handler fetch fault must exit at M, not re-delegate
+        medeleg &= ~((1 << 1) | (1 << 12))
+    hedeleg = _bits(rng, (0, 1, 2, 3, 4, 5, 6, 7, 8, 12, 13, 15), 0.35)
+    if vs_broken or g_broken or (cfg["vsatp"]["on"] and user):
+        hedeleg &= ~((1 << 1) | (1 << 12))
+    cfg["medeleg"], cfg["hedeleg"] = medeleg, hedeleg
+    cfg["mideleg"] = _bits(rng, (1, 5, 9), 0.4)
+    cfg["hideleg"] = _bits(rng, (2, 6, 10), 0.4)
+
+    cfg["mcounteren"] = int(rng.integers(0, 8))
+    cfg["hcounteren"] = int(rng.integers(0, 8))
+    cfg["scounteren"] = int(rng.integers(0, 8))
+    cfg["mstatus_set"] = (
+        (C.MSTATUS_SIE if rng.random() < 0.5 else 0) |
+        (C.MSTATUS_MIE if rng.random() < 0.4 else 0) |
+        (C.MSTATUS_SUM if rng.random() < 0.4 else 0) |
+        (C.MSTATUS_MXR if rng.random() < 0.3 else 0) |
+        (C.MSTATUS_TW if rng.random() < 0.15 else 0) |
+        (C.MSTATUS_TSR if rng.random() < 0.15 else 0))
+    cfg["hstatus"] = (
+        (C.HSTATUS_VTW if rng.random() < 0.15 else 0) |
+        (C.HSTATUS_VTSR if rng.random() < 0.15 else 0) |
+        (C.HSTATUS_VTVM if rng.random() < 0.15 else 0) |
+        (C.HSTATUS_HU if rng.random() < 0.3 else 0))
+    cfg["vsstatus"] = (
+        (C.MSTATUS_SIE if rng.random() < 0.5 else 0) |
+        (C.MSTATUS_SUM if rng.random() < 0.4 else 0) |
+        (C.MSTATUS_MXR if rng.random() < 0.3 else 0) |
+        (C.MSTATUS_SPP if rng.random() < 0.5 else 0))
+    cfg["mie"] = int(rng.integers(0, 1 << 13))
+    cfg["hvip"] = _bits(rng, (2, 6, 10), 0.2)
+    cfg["vsie"] = int(rng.integers(0, 1 << 11))
+    cfg["htimedelta"] = (0 if rng.random() < 0.6 else
+                         int(rng.integers(0, 4096)) if rng.random() < 0.75
+                         else _rand_u64(rng))
+    cfg["stimecmp_delta"] = int(rng.integers(8, 200)) \
+        if rng.random() < 0.35 else None
+    cfg["vstimecmp_delta"] = int(rng.integers(8, 200)) \
+        if rng.random() < 0.35 else None
+    cfg["mtimecmp_delta"] = int(rng.integers(8, 200)) \
+        if rng.random() < 0.3 else None
+    cfg["use_wfi"] = rng.random() < 0.06
+    if cfg["use_wfi"]:
+        cfg["mtimecmp_delta"] = cfg["mtimecmp_delta"] or \
+            int(rng.integers(32, 200))
+        cfg["mie"] |= C.IP_MTIP
+    # bias the enables toward what was armed/injected, so interrupts
+    # actually fire *during* scenarios instead of after their exit
+    for delta_key, bit in (("stimecmp_delta", C.IP_STIP),
+                           ("vstimecmp_delta", C.IP_VSTIP),
+                           ("mtimecmp_delta", C.IP_MTIP)):
+        if cfg[delta_key] is not None and rng.random() < 0.7:
+            cfg["mie"] |= bit
+    for b in (2, 6, 10):
+        if cfg["hvip"] & (1 << b) and rng.random() < 0.6:
+            cfg["mie"] |= 1 << b
+    cfg["seed_regs"] = {int(r): _rand_u64(rng) for r in
+                        rng.choice(_REGS, size=6, replace=False)}
+    cfg["n_body"] = int(rng.integers(8, 36))
+    return cfg
+
+
+def _rand_pte(rng, pa: int, want_user: bool, gstage: bool) -> int:
+    """A data-page PTE with randomized quirks (the torture surface)."""
+    r = rng.random()
+    if r < 0.10:
+        return 0                                   # invalid (V=0)
+    perms = PTE_V | PTE_R | PTE_A | PTE_D
+    if rng.random() < 0.75:
+        perms |= PTE_W
+    if rng.random() < 0.25:
+        perms |= PTE_X
+    if gstage:
+        if rng.random() >= 0.10:                   # 10%: missing U → GPF
+            perms |= PTE_U
+    elif want_user:
+        if rng.random() < 0.75:
+            perms |= PTE_U
+    elif rng.random() < 0.35:
+        perms |= PTE_U
+    if rng.random() < 0.10:
+        perms &= ~PTE_A
+    if rng.random() < 0.12:
+        perms &= ~PTE_D
+    if rng.random() < 0.06:                        # reserved W=1/R=0
+        perms = (perms | PTE_W) & ~PTE_R
+    ppn = pa >> 12
+    q = rng.random()
+    if q < 0.05:                                   # OOB host page
+        ppn = (T_MEM_BYTES >> 12) + int(rng.integers(0, 64))
+    elif q < 0.08:                                 # alias another data page
+        ppn = int(rng.integers(3, 8))
+    return (ppn << 10) | perms
+
+
+def _atp_value(st: Dict, root: int) -> int:
+    if not st["on"]:
+        return 0
+    if st.get("root_oob"):
+        root = T_MEM_BYTES + 0x100000
+    return SATP_SV39 | (root >> 12)
+
+
+def _build_s_tables(img: Image, rng, cfg) -> None:
+    img.link(S_L2, 0, S_L1)
+    sp = cfg["satp"].get("superpage") if not cfg["virt"] else \
+        cfg["vsatp"].get("superpage")
+    body_perms = P_KERN | (PTE_U if cfg["user"] else 0)
+    if sp:
+        ppn = 0 if sp == "aligned" else 1          # low bits ≠ 0 → fault
+        img.store64(S_L1 + 0 * 8, (ppn << 10) | body_perms)
+        return
+    img.link(S_L1, 0, S_L0)
+    img.map_page(S_L0, 0x0000, 0x0000, P_KERN)     # boot + handlers
+    img.map_page(S_L0, T_BODY, T_BODY, body_perms)
+    img.map_page(S_L0, T_LOG, T_LOG, P_KERN)
+    for p in T_DATA_PAGES:
+        pte = _rand_pte(rng, p, cfg["user"], gstage=False)
+        img.store64(S_L0 + ((p >> 12) & 0x1FF) * 8, pte)
+
+
+def _build_g_tables(img: Image, rng, cfg) -> None:
+    img.link(G_L2, 0, G_L1)
+    sp = cfg["hgatp"].get("superpage")
+    if sp:
+        ppn = 0 if sp == "aligned" else 1
+        img.store64(G_L1 + 0 * 8, (ppn << 10) | P_GUEST)
+        return
+    img.link(G_L1, 0, G_L0)
+    for p in (0x0000, T_BODY, T_LOG):
+        img.map_page(G_L0, p, p, P_GUEST)
+    if not cfg["g_drop_vs_tables"]:
+        for p in (S_L2, S_L1, S_L0):               # VS-stage table GPAs
+            img.map_page(G_L0, p, p, P_GUEST)
+    for p in T_DATA_PAGES:
+        pte = _rand_pte(rng, p, cfg["user"], gstage=True)
+        img.store64(G_L0 + ((p >> 12) & 0x1FF) * 8, pte)
+
+
+# -- body emission -----------------------------------------------------------
+
+def _rand_addr(rng) -> int:
+    r = rng.random()
+    if r < 0.55:                                   # aligned data
+        sz = 1 << int(rng.integers(0, 4))
+        off = int(rng.integers(0, 0x5000 // sz)) * sz
+        return 0x3000 + off
+    if r < 0.70:                                   # misaligned data
+        return 0x3000 + int(rng.integers(0, 0x5000))
+    if r < 0.74:                                   # code / log page
+        return int(rng.choice([T_BODY + 0x800, T_LOG + 0x80,
+                               T_LOG + int(rng.integers(0, 0xF8))]))
+    if r < 0.86:                                   # OOB physical
+        return T_MEM_BYTES + int(rng.integers(0, 1 << 20))
+    return int(rng.choice([0x10000000, 0x10000010, 0x10004000,
+                           0x1000BFF8])) + int(rng.integers(0, 2)) * 4
+
+
+_LOADS = ("lb", "lh", "lw", "ld", "lbu", "lhu", "lwu")
+_STORES = ("sb", "sh", "sw", "sd")
+_ALU_RR = ("add", "sub", "sll", "slt", "sltu", "xor", "srl", "sra", "or_",
+           "and_", "mul", "mulhu", "div", "divu", "rem", "remu", "addw",
+           "subw")
+_ALU_I = ("addi", "slti", "sltiu", "xori", "ori", "andi", "addiw")
+_HLV = ("hlv_b", "hlv_bu", "hlv_h", "hlv_hu", "hlvx_hu", "hlv_w", "hlv_wu",
+        "hlvx_wu", "hlv_d")
+_HSV = ("hsv_b", "hsv_h", "hsv_w", "hsv_d")
+
+
+def _emit_body(a: Asm, rng, cfg, case: int) -> None:
+    rreg = lambda: int(rng.choice(_REGS))
+    n_br = [0]
+
+    def item():
+        r = rng.random()
+        if r < 0.22:                               # ALU reg-reg
+            getattr(a, str(rng.choice(_ALU_RR)))(rreg(), rreg(), rreg())
+        elif r < 0.34:                             # ALU imm / shifts
+            if rng.random() < 0.3:
+                getattr(a, str(rng.choice(("slli", "srli", "srai"))))(
+                    rreg(), rreg(), int(rng.integers(0, 64)))
+            else:
+                getattr(a, str(rng.choice(_ALU_I)))(
+                    rreg(), rreg(), int(rng.integers(-2048, 2048)))
+        elif r < 0.40:
+            a.li(rreg(), _rand_u64(rng))
+        elif r < 0.52:                             # load
+            ar = rreg()
+            a.li(ar, _rand_addr(rng))
+            getattr(a, str(rng.choice(_LOADS)))(rreg(), 0, ar)
+        elif r < 0.62:                             # store
+            ar = rreg()
+            a.li(ar, _rand_addr(rng))
+            getattr(a, str(rng.choice(_STORES)))(rreg(), 0, ar)
+        elif r < 0.74:                             # CSR op
+            if rng.random() < 0.25:
+                a.csrr(rreg(), int(rng.choice(_CSR_RO)))
+            else:
+                addr = int(rng.choice(_CSR_RW))
+                k = rng.random()
+                if k < 0.4:
+                    vr = rreg()
+                    a.li(vr, _rand_u64(rng) if rng.random() < 0.5
+                         else int(rng.integers(0, 1 << 16)))
+                    getattr(a, str(rng.choice(("csrrw", "csrrs",
+                                               "csrrc"))))(rreg(), addr, vr)
+                else:
+                    getattr(a, str(rng.choice(("csrrwi", "csrrsi",
+                                               "csrrci"))))(
+                        rreg(), addr, int(rng.integers(0, 32)))
+        elif r < 0.78:                             # hlv / hsv
+            ar = rreg()
+            a.li(ar, _rand_addr(rng))
+            if rng.random() < 0.6:
+                getattr(a, str(rng.choice(_HLV)))(rreg(), ar)
+            else:
+                getattr(a, str(rng.choice(_HSV)))(rreg(), ar)
+        elif r < 0.86:                             # forward branch
+            lab = f"c{case}b{n_br[0]}"
+            n_br[0] += 1
+            getattr(a, str(rng.choice(("beq", "bne", "blt", "bge", "bltu",
+                                       "bgeu"))))(rreg(), rreg(), lab)
+            for _ in range(int(rng.integers(1, 3))):
+                a.addi(rreg(), rreg(), int(rng.integers(-64, 64)))
+            a.label(lab)
+        elif r < 0.90:                             # time read
+            a.csrr(rreg(), 0xC01)
+        elif r < 0.93:
+            a.sfence_vma() if rng.random() < 0.5 else (
+                a.hfence_vvma() if rng.random() < 0.5 else a.hfence_gvma())
+        elif r < 0.95 and cfg["use_wfi"]:
+            a.wfi()
+        elif r < 0.97:                             # wild jump
+            ar = rreg()
+            a.li(ar, int(rng.choice([0x3400, 0x7008, T_MEM_BYTES + 64,
+                                     0x100000])))
+            a.jalr(int(rng.choice([0, 1])), 0, ar)
+        else:                                      # early trap out
+            [a.ecall, a.ebreak, a.sret, a.mret][int(rng.integers(0, 4))]()
+
+    for _ in range(cfg["n_body"]):
+        item()
+    a.ecall()                                      # terminator
+
+
+def _emit_boot(a: Asm, rng, cfg) -> None:
+    a.li("t0", TM_HANDLER)
+    a.csrw(0x305, "t0")
+    a.li("t0", TS_HANDLER)
+    a.csrw(0x105, "t0")                            # stvec (V=0 at boot)
+    a.li("t0", TVS_HANDLER)
+    a.csrw(0x205, "t0")                            # vstvec
+    for csr, val in ((0x302, cfg["medeleg"]), (0x303, cfg["mideleg"]),
+                     (0x602, cfg["hedeleg"]), (0x603, cfg["hideleg"]),
+                     (0x306, cfg["mcounteren"]), (0x606, cfg["hcounteren"]),
+                     (0x106, cfg["scounteren"]), (0x600, cfg["hstatus"]),
+                     (0x200, cfg["vsstatus"]), (0x304, cfg["mie"]),
+                     (0x645, cfg["hvip"]), (0x204, cfg["vsie"]),
+                     (0x605, cfg["htimedelta"])):
+        if val:
+            a.li("t0", val)
+            a.csrw(csr, "t0")
+    if cfg["mstatus_set"]:
+        a.li("t0", cfg["mstatus_set"])
+        a.csrrs(0, 0x300, "t0")
+    a.li("t0", _atp_value(cfg["satp"], S_L2))
+    if cfg["satp"]["on"]:
+        a.csrw(0x180, "t0")
+    a.li("t0", _atp_value(cfg["vsatp"], S_L2))
+    if cfg["vsatp"]["on"]:
+        a.csrw(0x280, "t0")
+    a.li("t0", _atp_value(cfg["hgatp"], G_L2))
+    if cfg["hgatp"]["on"]:
+        a.csrw(0x680, "t0")
+    if cfg["stimecmp_delta"] is not None:
+        a.csrr("t0", 0xC01)
+        a.addi("t0", "t0", cfg["stimecmp_delta"])
+        a.csrw(0x14D, "t0")
+    if cfg["vstimecmp_delta"] is not None:
+        a.csrr("t0", 0xC01)
+        a.csrr("t1", 0x605)
+        a.add("t0", "t0", "t1")
+        a.addi("t0", "t0", cfg["vstimecmp_delta"])
+        a.csrw(0x24D, "t0")
+    if cfg["mtimecmp_delta"] is not None:
+        a.csrr("t0", 0xC01)
+        a.addi("t0", "t0", cfg["mtimecmp_delta"])
+        a.li("t1", 0x10004000)
+        a.sd("t0", 0, "t1")
+    for reg, val in sorted(cfg["seed_regs"].items()):
+        a.li(reg, val)
+    if cfg["mode"] == "M":
+        a.j("body")
+        return
+    if cfg["virt"]:
+        a.li("t0", C.MSTATUS_MPV)
+        a.csrrs(0, 0x300, "t0")
+    if not cfg["user"]:
+        a.li("t0", 1 << 11)                        # MPP = S
+        a.csrrs(0, 0x300, "t0")
+    a.li("t0", T_BODY)
+    a.csrw(0x341, "t0")                            # mepc
+    a.mret()
+
+
+def _emit_handlers(a: Asm) -> None:
+    """Fixed capture handlers (same for every scenario)."""
+    a.pad_to(TM_HANDLER)
+    # M: fingerprint = mcause ^ mtval + mepc + mtval2 → DONE
+    a.csrr("t0", 0x342)
+    a.csrr("t1", 0x343)
+    a.xor("t0", "t0", "t1")
+    a.csrr("t1", 0x341)
+    a.add("t0", "t0", "t1")
+    a.csrr("t1", 0x34B)
+    a.add("t0", "t0", "t1")
+    a.li("t6", MMIO_DONE)
+    a.sd("t0", 0, "t6")
+    a.label("m_spin")
+    a.j("m_spin")
+    a.pad_to(TS_HANDLER)
+    # HS/S: log scause/stval/htval, then ecall down to M (cause 9,
+    # undelegable by the WARL medeleg mask)
+    a.li("t5", T_LOG)
+    a.csrr("t4", 0x142)
+    a.sd("t4", 0, "t5")
+    a.csrr("t4", 0x143)
+    a.sd("t4", 8, "t5")
+    a.csrr("t4", 0x643)
+    a.sd("t4", 16, "t5")
+    a.ecall()
+    a.label("s_spin")
+    a.j("s_spin")
+    a.pad_to(TVS_HANDLER)
+    # VS: log vscause/vstval (via the V=1 swap), ecall (cause 10 → HS or M)
+    a.li("t5", T_LOG + 0x40)
+    a.csrr("t4", 0x142)
+    a.sd("t4", 0, "t5")
+    a.csrr("t4", 0x143)
+    a.sd("t4", 8, "t5")
+    a.ecall()
+    a.label("vs_spin")
+    a.j("vs_spin")
+    a.pad_to(T_BODY)
+    a.label("body")
+
+
+def gen_scenario(seed: int, case: int) -> Scenario:
+    """Deterministically regenerate scenario `case` of corpus `seed`."""
+    rng = np.random.Generator(np.random.PCG64(
+        np.random.SeedSequence([seed, case])))
+    cfg = _sample_cfg(rng)
+    a = Asm(0)
+    _emit_boot(a, rng, cfg)
+    _emit_handlers(a)
+    _emit_body(a, rng, cfg, case)
+    img = Image(T_MEM_WORDS)
+    img.place_code(0, a.assemble())
+    _build_s_tables(img, rng, cfg)
+    _build_g_tables(img, rng, cfg)
+    return Scenario(seed=seed, case=case, image=img.mem, cfg=cfg)
+
+
+def generate(seed: int, count: int) -> List[Scenario]:
+    return [gen_scenario(seed, k) for k in range(count)]
+
+
+# ---------------------------------------------------------------------------
+# differential run + diff
+# ---------------------------------------------------------------------------
+
+_COUNTERS = ("instret", "instret_virt", "pagefaults", "ticks", "timer_irqs",
+             "ctx_switches")
+# `walks` is microarchitectural (TLB hit/miss) — deliberately not compared.
+
+
+def _machine_final(scenarios: List[Scenario], max_ticks: int,
+                   chunk: int) -> Dict[str, np.ndarray]:
+    """Boot the corpus as one batched Fleet and return final-state arrays."""
+    import jax
+    from repro.core.hext.sim import Fleet
+    fleet = Fleet.from_corpus([s.image for s in scenarios],
+                              names=[s.name for s in scenarios],
+                              mem_words=T_MEM_WORDS)
+    fleet.run(max_ticks, chunk=chunk)
+    h = fleet.harts
+    with jax.experimental.enable_x64():
+        out = {
+            "pc": np.asarray(h.pc), "regs": np.asarray(h.regs),
+            "csrs": np.asarray(h.csrs), "priv": np.asarray(h.priv),
+            "virt": np.asarray(h.virt), "halted": np.asarray(h.halted),
+            "mem": np.asarray(h.mem), "console": np.asarray(h.console),
+            "done": np.asarray(h.counters.done),
+            "exit_code": np.asarray(h.counters.exit_code),
+            "exc_by_level": np.asarray(h.counters.exc_by_level),
+            "int_by_level": np.asarray(h.counters.int_by_level),
+        }
+        for k in _COUNTERS:
+            out[k] = np.asarray(getattr(h.counters, k))
+    return out
+
+
+def diff_case(mach: Dict[str, np.ndarray], i: int, ost: Dict) -> List[str]:
+    """Compare machine hart `i` against an oracle final state."""
+    d: List[str] = []
+
+    def chk(name, got, want):
+        if int(got) != int(want):
+            d.append(f"{name}: machine={int(got):#x} oracle={int(want):#x}")
+
+    chk("pc", mach["pc"][i], ost["pc"])
+    chk("priv", mach["priv"][i], ost["priv"])
+    chk("virt", mach["virt"][i], 1 if ost["virt"] else 0)
+    chk("halted", mach["halted"][i], 1 if ost["halted"] else 0)
+    chk("done", mach["done"][i], 1 if ost["done"] else 0)
+    chk("exit_code", mach["exit_code"][i], ost["exit_code"])
+    chk("console", mach["console"][i], ost["console"])
+    for r in range(1, 32):
+        chk(f"x{r}", mach["regs"][i, r], ost["regs"][r])
+    for idx in range(C.N_CSR):
+        chk(f"csr[{idx}]", mach["csrs"][i, idx], ost["csrs"][idx])
+    for k in _COUNTERS:
+        chk(k, mach[k][i], ost[k])
+    for lvl, nm in enumerate(("M", "HS", "VS")):
+        chk(f"exc@{nm}", mach["exc_by_level"][i, lvl],
+            ost["exc_by_level"][lvl])
+        chk(f"int@{nm}", mach["int_by_level"][i, lvl],
+            ost["int_by_level"][lvl])
+    mmem = mach["mem"][i]
+    omem = np.asarray(ost["mem"], dtype=np.uint64)
+    bad = np.nonzero(mmem != omem)[0]
+    if bad.size:
+        w = int(bad[0])
+        d.append(f"mem[{w * 8:#x}]: machine={int(mmem[w]):#x} "
+                 f"oracle={int(omem[w]):#x} (+{bad.size - 1} more words)")
+    return d
+
+
+def run_corpus(seed: int, count: int, max_ticks: int = MAX_TICKS,
+               chunk: int = CHUNK, verbose: bool = False) -> Dict:
+    """Generate, run (one batched Fleet + oracle), diff. Returns a report."""
+    # the device engine rounds the budget UP to whole chunk-scans; the
+    # oracle must run the exact same tick count or budget-burning
+    # scenarios would report phantom mismatches
+    max_ticks = -(-int(max_ticks) // int(chunk)) * int(chunk)
+    t0 = time.time()
+    scenarios = generate(seed, count)
+    t_gen = time.time() - t0
+    t0 = time.time()
+    mach = _machine_final(scenarios, max_ticks, chunk)
+    t_mach = time.time() - t0
+    t0 = time.time()
+    failures = []
+    for i, s in enumerate(scenarios):
+        ost = oracle.run(s.image, max_ticks)
+        d = diff_case(mach, i, ost)
+        if d:
+            failures.append({"case": s.case, "mode": s.cfg["mode"],
+                             "repro": repro_line(seed, s.case),
+                             "diff": d})
+            if verbose:
+                print(f"MISMATCH case {s.case} ({s.cfg['mode']}): "
+                      f"{d[:4]}\n  repro: {repro_line(seed, s.case)}")
+    t_oracle = time.time() - t0
+    return {
+        "seed": seed, "count": count, "max_ticks": max_ticks,
+        "failures": failures,
+        "wall_gen": t_gen, "wall_machine": t_mach, "wall_oracle": t_oracle,
+        "scenarios_per_sec_batched": count / max(t_mach, 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI: corpus run, or one-case repro with a full diff dump
+# ---------------------------------------------------------------------------
+
+def _write_report(path: Optional[str], rep: Dict) -> None:
+    if not path:
+        return
+    import json
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(rep, fh, indent=2)
+
+
+def _case_main(seed: int, case: int, max_ticks: int, verbose: bool,
+               out: Optional[str] = None) -> int:
+    max_ticks = -(-int(max_ticks) // CHUNK) * CHUNK   # match the engine
+    s = gen_scenario(seed, case)
+    print(f"case {case} of seed {seed}: mode={s.cfg['mode']} "
+          f"satp={s.cfg['satp']} vsatp={s.cfg['vsatp']} "
+          f"hgatp={s.cfg['hgatp']}")
+    mach = _machine_final([s], max_ticks, CHUNK)
+    ost = oracle.run(s.image, max_ticks)
+    d = diff_case(mach, 0, ost)
+    if verbose or d:
+        print(f"oracle: done={ost['done']} exit={ost['exit_code']:#x} "
+              f"ticks={ost['ticks']} instret={ost['instret']} "
+              f"exc={ost['exc_by_level']} int={ost['int_by_level']}")
+    _write_report(out, {"seed": seed, "case": case, "max_ticks": max_ticks,
+                        "mode": s.cfg["mode"], "diff": d,
+                        "repro": repro_line(seed, case)})
+    if d:
+        print(f"MISMATCH ({len(d)} fields):")
+        for line in d:
+            print(f"  {line}")
+        print(f"repro: {repro_line(seed, case)}")
+        return 1
+    print("machine == oracle")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="randomized differential conformance harness")
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    ap.add_argument("--count", type=int, default=256)
+    ap.add_argument("--case", type=int, default=None,
+                    help="re-run ONE scenario with a full diff dump")
+    ap.add_argument("--max-ticks", type=int, default=MAX_TICKS)
+    ap.add_argument("--out", default=None, help="write a JSON report")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.case is not None:
+        return _case_main(args.seed, args.case, args.max_ticks, args.verbose,
+                          out=args.out)
+    rep = run_corpus(args.seed, args.count, args.max_ticks,
+                     verbose=args.verbose)
+    print(f"seed {rep['seed']}: {rep['count']} scenarios, "
+          f"{len(rep['failures'])} mismatches "
+          f"(machine {rep['wall_machine']:.1f}s = "
+          f"{rep['scenarios_per_sec_batched']:.1f}/s batched, "
+          f"oracle {rep['wall_oracle']:.1f}s)")
+    for f in rep["failures"]:
+        print(f"  case {f['case']} ({f['mode']}): {f['diff'][0]}")
+        print(f"    repro: {f['repro']}")
+    _write_report(args.out, rep)
+    return 1 if rep["failures"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,30 @@
-"""Hypothesis property tests on the CSR file invariants (paper §3.1):
-WARL write masks, read-only fields, aliasing coherence, VS swapping."""
+"""Randomized property tests on the CSR file invariants (paper §3.1):
+WARL write masks, read-only fields, aliasing coherence, VS swapping.
+
+Seeded ``numpy.random.Generator`` + ``pytest.mark.parametrize`` instead of
+hypothesis (absent from the CI container, which used to skip this file
+silently).  Case counts are kept small for the push gate; the values are
+deterministic, so a failure's ``case`` index is directly reproducible.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
 from repro.core.hext import csr as C
 
-u64s = st.integers(0, (1 << 64) - 1)
+N_CASES = 16
+
+
+def _vals(test_tag: str, n: int = N_CASES):
+    """Deterministic per-test stream of u64 values (seeded by the test
+    name so adding a test never reshuffles another's cases)."""
+    rng = np.random.Generator(np.random.PCG64(
+        np.random.SeedSequence([0xC54] + list(test_tag.encode()))))
+    vals = rng.integers(0, 1 << 64, size=n, dtype=np.uint64)
+    # always include the classic corner values
+    vals[0], vals[1] = 0, (1 << 64) - 1
+    return [int(v) for v in vals]
 
 
 def _csrs():
@@ -35,8 +49,7 @@ def _rd(csrs, addr, priv=3, virt=False):
         return int(val), bool(ok), bool(vinst)
 
 
-@settings(max_examples=20, deadline=None)
-@given(v=u64s)
+@pytest.mark.parametrize("v", _vals("mideleg"))
 def test_mideleg_vs_bits_forced_one(v):
     """Paper: 'new read-only 1-bit fields for VS and guest external
     interrupts' — writes can never clear them."""
@@ -47,8 +60,7 @@ def test_mideleg_vs_bits_forced_one(v):
     assert got & ~(C.HS_INTERRUPTS | C.S_INTERRUPTS) == 0
 
 
-@settings(max_examples=20, deadline=None)
-@given(v=u64s)
+@pytest.mark.parametrize("v", _vals("hvip"))
 def test_hvip_writes_only_vs_bits_and_alias_mip(v):
     new, ok, _ = _rw(_csrs(), 0x645, v)
     mip = int(new[C.R_MIP])
@@ -58,20 +70,18 @@ def test_hvip_writes_only_vs_bits_and_alias_mip(v):
     assert rd == mip & C.VS_INTERRUPTS
 
 
-@settings(max_examples=20, deadline=None)
-@given(v=u64s)
+@pytest.mark.parametrize("v", _vals("hedeleg"))
 def test_hedeleg_cannot_delegate_guest_faults(v):
     """hedeleg must never delegate guest-page-faults / ecall-VS to VS."""
     new, _, _ = _rw(_csrs(), 0x602, v)
     got = int(new[C.R_HEDELEG])
     for bit in (C.EXC_IGUEST_PAGE_FAULT, C.EXC_LGUEST_PAGE_FAULT,
                 C.EXC_SGUEST_PAGE_FAULT, C.EXC_VIRTUAL_INSTRUCTION,
-                C.EXC_ECALL_VS, C.EXC_ECALL_M):
+                C.EXC_ECALL_VS, C.EXC_ECALL_M, C.EXC_ECALL_S):
         assert not (got >> bit) & 1
 
 
-@settings(max_examples=15, deadline=None)
-@given(v=u64s)
+@pytest.mark.parametrize("v", _vals("vs_swap", 12))
 def test_vs_swap_sstatus_redirects(v):
     """With V=1, sstatus writes hit vsstatus; mstatus untouched."""
     base = _csrs()
@@ -82,8 +92,7 @@ def test_vs_swap_sstatus_redirects(v):
     assert int(new[C.R_VSSTATUS]) & ~C.SSTATUS_MASK == 0
 
 
-@settings(max_examples=15, deadline=None)
-@given(v=u64s)
+@pytest.mark.parametrize("v", _vals("vsip", 12))
 def test_vsip_shifted_alias_roundtrip(v):
     """vsip.SSIP ↔ mip.VSSIP (shifted-by-1 alias), gated by hideleg."""
     base, _, _ = _rw(_csrs(), 0x603, C.VS_INTERRUPTS)   # hideleg all VS
@@ -110,8 +119,7 @@ def test_mepc_low_bit_warl():
     assert int(new[C.R_MEPC]) == 0x1002       # bit 0 forced clear
 
 
-@settings(max_examples=10, deadline=None)
-@given(v=u64s)
+@pytest.mark.parametrize("v", _vals("plain_rw", 8))
 def test_plain_csr_write_read_roundtrip(v):
     for addr, idx in ((0x305, C.R_MTVEC), (0x340, C.R_MSCRATCH),
                       (0x643, C.R_HTVAL), (0x680, C.R_HGATP)):
@@ -119,3 +127,23 @@ def test_plain_csr_write_read_roundtrip(v):
         assert ok
         rd, ok2, _ = _rd(new, addr)
         assert ok2 and rd == int(new[idx])
+
+
+@pytest.mark.parametrize("v", _vals("oracle_csr", 12))
+def test_csr_file_matches_oracle(v):
+    """Differential micro-check: the pure-Python oracle CSR file (DESIGN.md
+    §5) agrees with the JAX one on random writes + reads across modes."""
+    from repro.core.hext import oracle
+    for addr in (0x300, 0x100, 0x104, 0x144, 0x303, 0x602, 0x645, 0x14D,
+                 0x605, 0x680):
+        for priv, virt in ((3, False), (1, False), (1, True), (0, False)):
+            jnew, jok, jvi = _rw(_csrs(), addr, v, priv, virt)
+            onew, ook, ovi = oracle.csr_write(
+                oracle.init_csrs(), addr, v, priv, virt)
+            assert (jok, jvi) == (ook, ovi), (hex(addr), priv, virt)
+            with jax.experimental.enable_x64():   # u64 host reads need x64
+                jlist = [int(x) for x in np.asarray(jnew)]
+            assert jlist == onew, (hex(addr), priv, virt)
+            jv, jok, jvi = _rd(jnew, addr, priv, virt)
+            ov, ook, ovi = oracle.csr_read(onew, addr, priv, virt)
+            assert (jv, jok, jvi) == (ov, ook, ovi), (hex(addr), priv, virt)

@@ -1,0 +1,173 @@
+"""Differential conformance: batched torture scenarios vs the pure-Python
+oracle (DESIGN.md §5).
+
+The quick (push-gate) smoke runs a fixed-seed 64-scenario corpus as ONE
+batched Fleet and requires zero machine-vs-oracle mismatches; the slow
+(nightly) test runs the full 256-scenario acceptance corpus.  Mutation
+tests verify that an injected fault is actually *reported*, with a
+working one-command repro line — a diff harness that can't fail is
+worthless.
+"""
+import numpy as np
+import pytest
+
+from repro.core.hext import oracle, torture
+from repro.core.hext import csr as C
+
+SEED = torture.DEFAULT_SEED
+
+
+# ---------------------------------------------------------------------------
+# generator determinism + scenario well-formedness (no Fleet run)
+# ---------------------------------------------------------------------------
+
+def test_generator_is_deterministic():
+    a = torture.gen_scenario(SEED, 7)
+    b = torture.gen_scenario(SEED, 7)
+    assert np.array_equal(a.image, b.image)
+    assert a.cfg == b.cfg
+    c = torture.gen_scenario(SEED, 8)
+    assert not np.array_equal(a.image, c.image)
+
+
+def test_corpus_covers_all_modes_and_shapes():
+    """One 96-scenario draw must exercise every entry mode, both paging
+    states per stage, and at least one broken-PTE shape."""
+    cfgs = [torture.gen_scenario(SEED, k).cfg for k in range(96)]
+    assert {c["mode"] for c in cfgs} == set(torture.MODES)
+    assert any(c["satp"]["on"] for c in cfgs)
+    assert any(not c["satp"]["on"] for c in cfgs)
+    assert any(c["hgatp"]["on"] for c in cfgs)
+    assert any(c["satp"].get("superpage") for c in cfgs)
+    assert any(c["satp"].get("root_oob") or c["vsatp"].get("root_oob")
+               for c in cfgs)
+    assert any(c["stimecmp_delta"] is not None for c in cfgs)
+    assert any(c["use_wfi"] for c in cfgs)
+
+
+def test_every_scenario_terminates_under_oracle():
+    """Termination-by-construction check on a cheap oracle-only sweep:
+    the overwhelming majority of scenarios must finish well inside the
+    budget (a budget-burner is legal but must stay rare)."""
+    done = 0
+    for k in range(64):
+        s = torture.gen_scenario(SEED, k)
+        st = oracle.run(s.image, torture.MAX_TICKS)
+        done += bool(st["done"])
+    assert done >= 60, f"only {done}/64 scenarios terminated"
+
+
+# ---------------------------------------------------------------------------
+# the quick differential smoke: one batched Fleet, fixed seed, zero diffs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fuzz
+def test_quick_fuzz_smoke_zero_mismatches():
+    rep = torture.run_corpus(SEED, 64)
+    assert rep["failures"] == [], \
+        "\n".join(f["repro"] for f in rep["failures"])
+    # one batched run: throughput is per-Fleet wall time, must be sane
+    assert rep["scenarios_per_sec_batched"] > 0
+
+
+@pytest.mark.fuzz
+@pytest.mark.slow
+def test_full_fuzz_corpus_zero_mismatches():
+    """The 256-scenario acceptance corpus (nightly)."""
+    rep = torture.run_corpus(SEED, 256)
+    assert rep["failures"] == [], \
+        "\n".join(f["repro"] for f in rep["failures"])
+
+
+# ---------------------------------------------------------------------------
+# mutation tests: an injected fault must be caught AND carry a repro line
+# ---------------------------------------------------------------------------
+
+def _oracle_final(case: int):
+    s = torture.gen_scenario(SEED, case)
+    return s, oracle.run(s.image, torture.MAX_TICKS)
+
+
+def _as_machine_arrays(ost):
+    """Shape an oracle final state like `_machine_final`'s batch-of-1."""
+    return {
+        "pc": np.array([ost["pc"]], dtype=np.uint64),
+        "regs": np.array([ost["regs"]], dtype=np.uint64),
+        "csrs": np.array([ost["csrs"]], dtype=np.uint64),
+        "priv": np.array([ost["priv"]]),
+        "virt": np.array([ost["virt"]]),
+        "halted": np.array([ost["halted"]]),
+        "mem": np.array([ost["mem"]], dtype=np.uint64),
+        "console": np.array([ost["console"]]),
+        "done": np.array([ost["done"]]),
+        "exit_code": np.array([ost["exit_code"]], dtype=np.uint64),
+        "exc_by_level": np.array([ost["exc_by_level"]]),
+        "int_by_level": np.array([ost["int_by_level"]]),
+        **{k: np.array([ost[k]]) for k in torture._COUNTERS},
+    }
+
+
+def test_identical_states_diff_clean():
+    _, ost = _oracle_final(3)
+    assert torture.diff_case(_as_machine_arrays(ost), 0, ost) == []
+
+
+def test_mutated_state_is_caught_per_field():
+    _, ost = _oracle_final(3)
+    for field, mutate in (
+            ("x7", lambda m: m["regs"].__setitem__((0, 7), 0xDEAD)),
+            ("csr", lambda m: m["csrs"].__setitem__((0, C.R_MCAUSE), 99)),
+            ("instret", lambda m: m.__setitem__(
+                "instret", m["instret"] + 1)),
+            ("mem", lambda m: m["mem"].__setitem__((0, 0x3000 // 8), 1)),
+            ("exit_code", lambda m: m.__setitem__(
+                "exit_code", m["exit_code"] ^ 1))):
+        mach = _as_machine_arrays(ost)
+        mutate(mach)
+        d = torture.diff_case(mach, 0, ost)
+        assert d, f"mutation of {field} not caught"
+
+
+def test_failure_report_carries_working_repro_line():
+    line = torture.repro_line(SEED, 42)
+    assert "--seed" in line and "--case 42" in line \
+        and "repro.core.hext.torture" in line
+    # the repro entry point regenerates the exact same scenario
+    s = torture.gen_scenario(SEED, 42)
+    s2 = torture.gen_scenario(SEED, 42)
+    assert np.array_equal(s.image, s2.image)
+
+
+# ---------------------------------------------------------------------------
+# oracle unit checks against hand-computed architecture facts
+# ---------------------------------------------------------------------------
+
+def test_oracle_reset_and_counters_shape():
+    st = oracle.reset_state(np.zeros(64, dtype=np.uint64))
+    assert st["priv"] == 3 and not st["virt"] and st["pc"] == 0
+    assert st["csrs"][C.R_MTIMECMP] == C.TIMER_DISARMED
+    assert st["csrs"][C.R_MIDELEG] == C.MIDELEG_FORCED
+
+
+def test_oracle_timer_advance_and_fire():
+    st = oracle.reset_state(np.zeros(64, dtype=np.uint64))
+    st["csrs"][C.R_STIMECMP] = 3
+    for _ in range(2):
+        oracle._advance_timers(st["csrs"])
+    assert st["csrs"][C.R_MTIME] == 2
+    assert not st["csrs"][C.R_MIP] & C.IP_STIP
+    oracle._advance_timers(st["csrs"])
+    assert st["csrs"][C.R_MIP] & C.IP_STIP
+
+
+def test_oracle_two_stage_walk_faults_reserved_pte():
+    """A W=1/R=0 leaf must page-fault in the oracle too."""
+    st = oracle.reset_state(np.zeros(1 << 12, dtype=np.uint64))
+    st["csrs"][C.R_SATP] = (8 << 60) | (0x0000 >> 12)
+    st["priv"] = 1
+    # L2[0] → table @0x1000; L1[0] → table @0x2000; L0[3] = reserved leaf
+    st["mem"][0] = (0x1000 >> 12) << 10 | 0x1
+    st["mem"][0x1000 // 8] = (0x2000 >> 12) << 10 | 0x1
+    st["mem"][0x2000 // 8 + 3] = (0x3000 >> 12) << 10 | 0x5  # V|W, no R
+    xr = oracle.translate(st, 0x3008, oracle.ACC_R)
+    assert xr["fault"] and xr["cause"] == C.EXC_LPAGE_FAULT

@@ -676,29 +676,77 @@ class TestSchedLayout:
         assert lay.ctx0 == programs.CTX0
         assert lay.mem_words == programs.MEM_WORDS
 
-    def test_layout_invariants_all_n(self):
-        for n in range(1, programs.MAX_GUESTS + 1):
-            lay = programs.sched_layout(n)
-            # Sv39x4 roots are 16K-aligned, 16 KiB wide, non-overlapping
-            for l2, l1, l0 in zip(lay.g_l2, lay.g_l1, lay.g_l0):
-                assert l2 % 0x4000 == 0
-                assert l1 == l2 + 0x4000 and l0 == l2 + 0x5000
-            # scheduler state fits below the G-stage tables
-            assert lay.ctx0 + n * programs.CTX_SIZE <= lay.g_l2[0]
-            assert lay.guest_res + 8 * n <= lay.ctx0
-            assert lay.ginfo0 + n * programs.GINFO_SIZE <= lay.guest_res
-            # windows sit above every table block and tile contiguously
-            tab_end = lay.g_l2[-1] + programs.GTAB_STRIDE
-            assert lay.win[0] >= tab_end
-            for i, w in enumerate(lay.win):
-                assert w == lay.win[0] + i * programs.GUEST_WIN
-            assert lay.mem_words * 8 == lay.win[-1] + programs.GUEST_WIN
+    @pytest.mark.parametrize("n", range(1, programs.MAX_GUESTS + 1))
+    def test_layout_invariants_all_n(self, n):
+        lay = programs.sched_layout(n)
+        # Sv39x4 roots are 16K-aligned, 16 KiB wide, non-overlapping
+        for l2, l1, l0 in zip(lay.g_l2, lay.g_l1, lay.g_l0):
+            assert l2 % 0x4000 == 0
+            assert l1 == l2 + 0x4000 and l0 == l2 + 0x5000
+        # scheduler state fits below the G-stage tables
+        assert lay.ctx0 + n * programs.CTX_SIZE <= lay.g_l2[0]
+        assert lay.guest_res + 8 * n <= lay.ctx0
+        assert lay.ginfo0 + n * programs.GINFO_SIZE <= lay.guest_res
+        # windows sit above every table block and tile contiguously
+        tab_end = lay.g_l2[-1] + programs.GTAB_STRIDE
+        assert lay.win[0] >= tab_end
+        for i, w in enumerate(lay.win):
+            assert w == lay.win[0] + i * programs.GUEST_WIN
+        assert lay.mem_words * 8 == lay.win[-1] + programs.GUEST_WIN
 
-    def test_out_of_range_n_rejected(self):
+    @pytest.mark.parametrize("n", range(1, programs.MAX_GUESTS + 1))
+    def test_region_disjointness_all_n(self, n):
+        """Every layout region — scheduler state blocks, per-guest table
+        blocks, per-guest windows — must be pairwise disjoint and inside
+        the image, for EVERY n (an overlap at an untested n would mean one
+        guest silently corrupting a sibling's tables or context)."""
+        lay = programs.sched_layout(n)
+        regions = [("ginfo", lay.ginfo0, lay.ginfo0 +
+                    n * programs.GINFO_SIZE),
+                   ("res", lay.guest_res, lay.guest_res + 8 * n)]
+        regions += [(f"ctx{i}", lay.ctx0 + i * programs.CTX_SIZE,
+                     lay.ctx0 + (i + 1) * programs.CTX_SIZE)
+                    for i in range(n)]
+        regions += [(f"gtab{i}", l2, l2 + programs.GTAB_STRIDE)
+                    for i, l2 in enumerate(lay.g_l2)]
+        regions += [(f"win{i}", w, w + programs.GUEST_WIN)
+                    for i, w in enumerate(lay.win)]
+        for i, (na, sa, ea) in enumerate(regions):
+            assert sa < ea <= lay.mem_words * 8, (na, n)
+            assert sa % 8 == 0, (na, n)
+            for nb, sb, eb in regions[i + 1:]:
+                assert ea <= sb or eb <= sa, \
+                    f"n={n}: {na} [{sa:#x},{ea:#x}) overlaps " \
+                    f"{nb} [{sb:#x},{eb:#x})"
+        # context-slot count: exactly n slots fit between ctx0 and the
+        # first table block, each holding GPRs + the VS CSR bank + vtime
+        assert programs.CTX_VTIME + 8 < programs.CTX_SIZE
+        assert lay.ctx0 >= lay.guest_res + 8 * n
+        # scheduler code/data regions below the dynamic area are fixed
+        assert lay.ginfo0 == programs.GINFO0 >= programs.SCHED_CUR + 0x20
+
+    @pytest.mark.parametrize("n", (0, -1, programs.MAX_GUESTS + 1,
+                                   programs.MAX_GUESTS + 100))
+    def test_out_of_range_n_rejected(self, n):
         with pytest.raises(ValueError):
-            programs.sched_layout(0)
+            programs.sched_layout(n)
+
+    @pytest.mark.parametrize("n", (0, 9))
+    def test_nguest_builders_reject_bad_n(self, n):
+        """The image builder and the Fleet facade both surface the
+        layout's ValueError instead of building a corrupt image."""
+        wls = [programs.SHA()] * n
         with pytest.raises(ValueError):
-            programs.sched_layout(programs.MAX_GUESTS + 1)
+            programs.build_image_nguest(wls)
+        from repro.core.hext.sim import Fleet
+        if n > 0:
+            with pytest.raises(ValueError):
+                Fleet.boot([tuple(wls)], guests_per_hart=n)
+
+    @pytest.mark.parametrize("n", range(1, programs.MAX_GUESTS + 1))
+    def test_image_sized_by_layout_all_n(self, n):
+        img = programs.build_image_nguest([programs.SHA()] * n)
+        assert img.shape[0] == programs.sched_layout(n).mem_words
 
     def test_scheduler_assembles_for_all_n(self):
         """Boot code must fit below HS2_HANDLER and the handler below
