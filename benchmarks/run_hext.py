@@ -10,6 +10,11 @@ grows with tenants per hart — ``instret / (N × single-guest instret)`` for
 N ∈ {1, 2, 4} by default (the cloud-density measurement the paper's
 scenario motivates; add 8 with ``--guests``).
 
+An **engine column** additionally times the same matrix on the pluggable
+backends (``jit`` vs ``sharded`` ticks/s, DESIGN.md §3) after verifying
+both are bit-identical to the counter-producing reference run, so the
+committed counter goldens can never be perturbed by an engine swap.
+
 Usage: PYTHONPATH=src python -m benchmarks.run_hext [--out PATH]
                                                     [--timeslice N]
                                                     [--guests 1 2 4 ...]
@@ -22,10 +27,46 @@ import json
 import os
 import time
 
+import jax
+
+from repro.core.hext import engine as hext_engine
 from repro.core.hext import programs
 from repro.core.hext.sim import Fleet, MASK64
 
 DEFAULT_GUEST_COUNTS = (1, 2, 4)
+
+
+def _engine_column(wls, max_ticks: int, chunk: int, ref_fleet) -> dict:
+    """jit-vs-sharded throughput on the same native/guest matrix.
+
+    Both engines re-run the matrix (the jit rate is re-measured on a warm
+    executable, matching what the sharded run pays), results are checked
+    bit-identical against the reference fleet the counter columns came
+    from, and ticks/s is aggregate simulated ticks over wall time.  On a
+    single-device host the sharded engine falls back to jit (recorded in
+    the column)."""
+    flags = [False] * len(wls) + [True] * len(wls)
+    ref = ref_fleet.counters()
+    total_ticks = sum(int(c.ticks) for c in ref)
+    out = {}
+    for name in ("jit", "sharded"):
+        fleet = Fleet.boot(wls + wls, guest=flags, engine=name)
+        t0 = time.time()
+        fleet.run(max_ticks, chunk=chunk)
+        wall = time.time() - t0
+        for i in range(len(fleet)):
+            d = hext_engine.diff_states(fleet[i], ref_fleet[i])
+            if d:
+                raise RuntimeError(
+                    f"engine {name} drifted from the reference on hart "
+                    f"{i}: {d[:3]}")
+        out[name] = {
+            "wall_seconds": wall,
+            "ticks_per_sec": total_ticks / max(wall, 1e-9),
+        }
+    out["sharded"]["devices"] = len(jax.devices())
+    out["sharded"]["fallback_to_jit"] = len(jax.devices()) < 2
+    return out
 
 
 def main(out_path: str = "benchmarks/results/hext_runs.json",
@@ -41,6 +82,11 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
     fleet.run(max_ticks, chunk=chunk)
     wall = time.time() - t0
     counters = fleet.counters()
+
+    # engine column: jit vs sharded throughput on the same matrix, with a
+    # bit-identity check against the counter-producing reference fleet so
+    # the published goldens cannot be perturbed by an engine bug
+    engines = _engine_column(wls, max_ticks, chunk, fleet)
 
     # consolidation columns: each workload × N tenants per hart, timer
     # round-robin (every N is its own fleet — image sizes differ with N)
@@ -97,6 +143,7 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
                                       for n in counts},
         "setup_seconds": t0 - t_start,
         "timeslice": ts,
+        "engines": engines,
         "consolidation_overhead": consolidation,
         "workloads": results,
     }
@@ -123,6 +170,13 @@ def main(out_path: str = "benchmarks/results/hext_runs.json",
               "  ".join(f"N={n}: {c['mean_overhead']:.3f}x"
                         for n, c in consolidation.items()
                         if c["mean_overhead"]))
+    print("engine column: " +
+          "  ".join(f"{n}: {e['ticks_per_sec']:,.0f} ticks/s"
+                    for n, e in engines.items()) +
+          (f"  (sharded fell back to jit on "
+           f"{engines['sharded']['devices']} device)"
+           if engines["sharded"]["fallback_to_jit"] else
+           f"  ({engines['sharded']['devices']} devices)"))
     return out
 
 

@@ -66,11 +66,13 @@ def main(out_path: str = "benchmarks/results/torture_fuzz.json",
             max_ticks, chunk=torture.CHUNK)
     wall_serial_each = (time.time() - t0) / max(len(sub) - 1, 1)
 
-    # oracle throughput (the host-side reference cost per scenario)
+    # oracle throughput (the host-side reference cost per scenario),
+    # measured through the first-class OracleEngine fleet path — the same
+    # leg run_corpus diffs against (DESIGN.md §3/§5)
     t0 = time.time()
-    from repro.core.hext import oracle
-    for s in scenarios:
-        oracle.run(s.image, max_ticks)
+    Fleet.from_corpus([s.image for s in scenarios],
+                      mem_words=torture.T_MEM_WORDS,
+                      engine="oracle").run(max_ticks, chunk=torture.CHUNK)
     wall_oracle = time.time() - t0
 
     batched_rate = count / wall_batched

@@ -1,26 +1,37 @@
 """Quickstart: boot a guest VM under the xvisor-lite hypervisor and compare
 it against native execution — the paper's experiment in 30 lines.
 
+The optional second argument picks the execution backend (DESIGN.md §3):
+``jit`` (default), ``sharded`` (pmap over jax.devices()), or ``oracle``
+(the pure-Python reference model — slow, but great for differential
+debugging: counters match the device engines bit-for-bit except `walks`).
+
 Run with the package on the path (see DESIGN.md §6):
 
-    PYTHONPATH=src python examples/quickstart.py [workload]
+    PYTHONPATH=src python examples/quickstart.py [workload] [engine]
 """
 import sys
 import time
 
 from repro.core.hext import programs
+from repro.core.hext.engine import ENGINES
 from repro.core.hext.sim import Fleet
 
 
 def main():
     name = sys.argv[1] if len(sys.argv) > 1 else "crc32"
+    engine = sys.argv[2] if len(sys.argv) > 2 else "jit"
     by_name = {w.name: w for w in programs.WORKLOADS}
     if name not in by_name:
         sys.exit(f"unknown workload {name!r}; "
                  f"choose from: {', '.join(sorted(by_name))}")
+    if engine not in ENGINES:
+        sys.exit(f"unknown engine {engine!r}; "
+                 f"choose from: {', '.join(sorted(ENGINES))}")
     wl = by_name[name]
-    print(f"workload: {wl.name}   golden checksum: {wl.golden()}")
-    fleet = Fleet.boot([wl, wl], guest=[False, True])
+    print(f"workload: {wl.name}   golden checksum: {wl.golden()}   "
+          f"engine: {engine}")
+    fleet = Fleet.boot([wl, wl], guest=[False, True], engine=engine)
     t0 = time.time()
     fleet.run(max_ticks=120000, chunk=8192)
     wall = time.time() - t0

@@ -1,6 +1,12 @@
 # NOTE: `torture` is intentionally not imported eagerly — it is run as
 # `python -m repro.core.hext.torture`, and an eager package import would
 # double-execute the module under runpy.
-from repro.core.hext import (csr, isa, machine, oracle,  # noqa: F401
-                             programs, sim, translate, trap)
-from repro.core.hext.sim import Counters, Fleet, HartState  # noqa: F401
+from repro.core.hext import (checkpoint, csr, engine, isa,  # noqa: F401
+                             machine, oracle, programs, sim, translate,
+                             trap)
+from repro.core.hext.checkpoint import CheckpointError  # noqa: F401
+from repro.core.hext.engine import (Engine, JitEngine,  # noqa: F401
+                                    OracleEngine, ShardedEngine,
+                                    diff_states)
+from repro.core.hext.sim import (Counters, Fleet, HartState,  # noqa: F401
+                                 StaleHartsError)

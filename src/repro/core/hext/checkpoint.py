@@ -1,0 +1,238 @@
+"""gem5-style checkpointing for hext fleets (DESIGN.md §3).
+
+A checkpoint is a single versioned ``.npz`` holding every leaf of the
+batched ``HartState`` pytree plus a JSON metadata record:
+
+* one array per architectural field (``pc``, ``regs``, ``csrs``, …),
+  ``tlb.<key>`` for the software-TLB sub-pytree and ``counters.<key>``
+  for the counter record — host numpy, exact dtypes, leading fleet dim;
+* ``__meta__`` — ``{format, version, schema, schema_sha256, specs,
+  engine}``.  ``schema`` is the sorted ``(key, dtype, shape)`` table of
+  the saved arrays and ``schema_sha256`` its hash; on restore the schema
+  is recomputed from the arrays actually present and must hash to the
+  stored value, so a truncated/tampered file or a snapshot written by an
+  incompatible ``HartState`` layout is rejected with
+  :class:`CheckpointError` instead of resuming silently wrong.
+
+Restore rebuilds the typed state bit-for-bit, so
+``snapshot → restore → run`` is indistinguishable from an uninterrupted
+run (tested per workload class).  ``HartSpec`` metadata travels by
+workload *name* and is resolved against the standard registry
+(``programs.WORKLOADS``); custom workloads restore with
+``workload=None`` (golden checks unavailable) unless the caller passes
+explicit specs to ``Fleet.restore``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hext import machine as _machine
+from repro.core.hext import programs as _programs
+
+FORMAT = "hext-fleet-checkpoint"
+VERSION = 1
+
+__all__ = ["CheckpointError", "FORMAT", "VERSION", "save", "load",
+           "schema_of", "schema_sha256", "workload_registry"]
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is unreadable, corrupted, or schema-incompatible."""
+
+
+def _x64():
+    return jax.experimental.enable_x64()
+
+
+_STATE_KEYS = ("pc", "regs", "csrs", "priv", "virt", "mem", "halted",
+               "console")
+_COUNTER_KEYS = ("done", "exit_code", "instret", "instret_virt",
+                 "exc_by_level", "int_by_level", "pagefaults", "walks",
+                 "ticks", "timer_irqs", "ctx_switches")
+
+
+def _flatten(harts) -> Dict[str, np.ndarray]:
+    with _x64():
+        out = {k: np.asarray(getattr(harts, k)) for k in _STATE_KEYS}
+        out.update({f"tlb.{k}": np.asarray(v)
+                    for k, v in harts.tlb.items()})
+        out.update({f"counters.{k}": np.asarray(getattr(harts.counters, k))
+                    for k in _COUNTER_KEYS})
+        return out
+
+
+def _expected_keys_and_dtypes() -> Dict[str, np.dtype]:
+    """What the *current* HartState layout looks like (tiny reference
+    state) — the restore side's notion of a compatible schema."""
+    with _x64():
+        ref = _machine._make_state(1)
+    out = {k: np.asarray(ref[k]).dtype for k in _STATE_KEYS}
+    out.update({f"tlb.{k}": np.asarray(v).dtype
+                for k, v in ref["tlb"].items()})
+    out.update({f"counters.{k}": np.asarray(ref[k]).dtype
+                for k in _COUNTER_KEYS})
+    return out
+
+
+def schema_of(arrays: Dict[str, np.ndarray]) -> List[List[Any]]:
+    """Canonical, JSON-stable ``[key, dtype, shape]`` table."""
+    return [[k, arrays[k].dtype.str, list(arrays[k].shape)]
+            for k in sorted(arrays)]
+
+
+def schema_sha256(schema: List[List[Any]]) -> str:
+    return hashlib.sha256(
+        json.dumps(schema, separators=(",", ":")).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# HartSpec (de)serialization — workloads travel by name
+# ---------------------------------------------------------------------------
+
+def workload_registry() -> Dict[str, Any]:
+    reg = {}
+    for w in _programs.WORKLOADS + _programs.WORKLOADS_EXTRA:
+        # several workloads materialize their input buffer (and hence
+        # their golden) in write_data; a restored spec may be the first
+        # user of the shared instance in this process, so warm it against
+        # a scratch image (write_data is seeded → idempotent)
+        w.write_data(_programs.Image(_programs.MEM_WORDS))
+        reg[w.name] = w
+    return reg
+
+
+def _encode_spec(spec) -> Dict[str, Any]:
+    return {
+        "name": spec.name,
+        "guest": bool(spec.guest),
+        "timeslice": int(spec.timeslice),
+        "workload": None if spec.workload is None else spec.workload.name,
+        "guests": None if spec.guests is None else
+        [None if w is None else w.name for w in spec.guests],
+    }
+
+
+def _decode_spec(d: Dict[str, Any], reg: Dict[str, Any]):
+    from repro.core.hext.sim import HartSpec
+    wl = reg.get(d["workload"]) if d["workload"] is not None else None
+    guests = None
+    if d["guests"] is not None:
+        # a stored null is a migrated-away slot (legitimately None); an
+        # unknown *name* must NOT decode to None — the report layer would
+        # read it as migrated-away and mis-total the expected checksum.
+        # The caller has to supply explicit specs instead.
+        unknown = [n for n in d["guests"]
+                   if n is not None and n not in reg]
+        if unknown:
+            raise CheckpointError(
+                f"spec {d['name']!r} references guest workloads not in "
+                f"the registry: {unknown} — restore with explicit "
+                f"Fleet.restore(path, specs=...)")
+        guests = tuple(None if n is None else reg[n]
+                       for n in d["guests"])
+    return HartSpec(workload=wl, guest=bool(d["guest"]),
+                    name=str(d["name"]), guests=guests,
+                    timeslice=int(d["timeslice"]))
+
+
+# ---------------------------------------------------------------------------
+# save / load
+# ---------------------------------------------------------------------------
+
+def save(path: str, harts, specs: Sequence[Any],
+         engine_name: str = "jit") -> str:
+    """Write the fleet's full state + spec metadata as a versioned .npz."""
+    arrays = _flatten(harts)
+    nharts = int(arrays["pc"].shape[0]) if arrays["pc"].ndim else 1
+    if len(specs) != nharts:
+        raise ValueError(f"{len(specs)} specs for {nharts} harts")
+    schema = schema_of(arrays)
+    meta = {
+        "format": FORMAT,
+        "version": VERSION,
+        "schema": schema,
+        "schema_sha256": schema_sha256(schema),
+        "specs": [_encode_spec(s) for s in specs],
+        "engine": engine_name,
+    }
+    with open(path, "wb") as fh:
+        np.savez_compressed(fh, __meta__=np.array(json.dumps(meta)),
+                            **arrays)
+    return path
+
+
+def load(path: str, decode_specs: bool = True) -> Tuple[Any, List[Any]]:
+    """Read a checkpoint → ``(HartState, [HartSpec])``.
+
+    Raises :class:`CheckpointError` on anything that cannot restore
+    bit-for-bit: unreadable/corrupted files, a version or schema-hash
+    mismatch, and fields missing/extra/retyped relative to the current
+    ``HartState`` layout.  ``decode_specs=False`` skips workload-name
+    resolution (returns ``[]``) — for callers supplying their own specs,
+    e.g. when the snapshot ran custom workload objects."""
+    try:
+        z = np.load(path, allow_pickle=False)
+    except Exception as e:
+        raise CheckpointError(f"unreadable checkpoint {path!r}: {e}") from e
+    with z:
+        if "__meta__" not in z.files:
+            raise CheckpointError(f"{path!r} has no __meta__ record — "
+                                  f"not a {FORMAT} file")
+        try:
+            meta = json.loads(str(z["__meta__"][()]))
+            arrays = {k: z[k] for k in z.files if k != "__meta__"}
+        except Exception as e:
+            raise CheckpointError(f"corrupted checkpoint {path!r}: "
+                                  f"{e}") from e
+    if meta.get("format") != FORMAT:
+        raise CheckpointError(
+            f"{path!r}: format {meta.get('format')!r} != {FORMAT!r}")
+    if meta.get("version") != VERSION:
+        raise CheckpointError(
+            f"{path!r}: checkpoint version {meta.get('version')} is not "
+            f"supported (this build reads version {VERSION})")
+    schema = schema_of(arrays)
+    if schema_sha256(schema) != meta.get("schema_sha256") or \
+            schema != meta.get("schema"):
+        raise CheckpointError(
+            f"{path!r}: schema hash mismatch — the file is corrupted or "
+            f"was edited after save")
+    expected = _expected_keys_and_dtypes()
+    missing = sorted(set(expected) - set(arrays))
+    extra = sorted(set(arrays) - set(expected))
+    if missing or extra:
+        raise CheckpointError(
+            f"{path!r}: field set does not match this build's HartState "
+            f"(missing {missing}, unexpected {extra}) — snapshot from an "
+            f"incompatible version")
+    for k, dt in expected.items():
+        if arrays[k].dtype != dt:
+            raise CheckpointError(
+                f"{path!r}: field {k!r} has dtype {arrays[k].dtype}, "
+                f"this build expects {dt}")
+    harts = _to_harts(arrays)
+    specs: List[Any] = []
+    if decode_specs:
+        reg = workload_registry()             # built once per load
+        specs = [_decode_spec(d, reg) for d in meta.get("specs", [])]
+    return harts, specs
+
+
+def _to_harts(arrays: Dict[str, np.ndarray]):
+    from repro.core.hext.sim import Counters, HartState
+    with _x64():
+        j = {k: jnp.asarray(v) for k, v in arrays.items()}
+        counters = Counters(**{k: j[f"counters.{k}"]
+                               for k in _COUNTER_KEYS})
+        tlb = {k.split(".", 1)[1]: v
+               for k, v in j.items() if k.startswith("tlb.")}
+        return HartState(
+            pc=j["pc"], regs=j["regs"], csrs=j["csrs"], priv=j["priv"],
+            virt=j["virt"], mem=j["mem"], tlb=tlb, halted=j["halted"],
+            console=j["console"], counters=counters)

@@ -26,8 +26,10 @@ internally around trace+execute.
 
 NOTE: this module is the raw-dict ISA-core layer.  The public simulation
 API is ``repro.core.hext.sim`` (typed ``HartState`` pytree + ``Fleet``
-facade, DESIGN.md §3); ``make_state``/``run_until_done``/
-``batched_run_until_done`` remain as thin deprecation shims over it.
+facade, DESIGN.md §3) and the run loops live behind the pluggable
+``repro.core.hext.engine`` backends; the old raw-dict shims
+(``make_state``/``run_until_done``/``batched_run_until_done``) are gone —
+use ``HartState.fresh`` / ``Fleet`` / ``engine.JitEngine`` instead.
 """
 from __future__ import annotations
 
@@ -53,12 +55,9 @@ def _u(x):
 DEFAULT_MEM_WORDS = 1 << 15          # 256 KiB per hart
 
 
-def make_state(mem_words: int = DEFAULT_MEM_WORDS) -> Dict:
-    with jax.experimental.enable_x64():
-        return _make_state(mem_words)
-
-
 def _make_state(mem_words: int) -> Dict:
+    """Power-on raw-dict state (private: the typed ``sim.HartState.fresh``
+    is the public constructor and owns the x64 context)."""
     return {
         "pc": _u(0),
         "regs": jnp.zeros((32,), U64),
@@ -228,24 +227,8 @@ def batched_run(states: Dict, n_ticks: int) -> Dict:
         return jax.jit(jax.vmap(one))(states)
 
 
-def run_until_done(state, max_ticks: int, chunk: int = 4096):
-    """Deprecated shim — prefer ``sim.Fleet`` / ``sim.run_on_device``.
-
-    Delegates to the on-device while-loop engine (early exit without
-    per-chunk host sync); kept so legacy call sites still work.  Accepts a
-    raw dict or a typed ``HartState`` and returns the same representation;
-    the input is never donated, matching the old host loop.
-    """
-    from repro.core.hext import sim
-    out = sim.run_on_device(sim.HartState.from_raw(state), max_ticks, chunk,
-                            donate=False)
-    return out if isinstance(state, sim.HartState) else out.to_raw()
-
-
-def batched_run_until_done(states, max_ticks: int, chunk: int = 4096):
-    """Deprecated shim — prefer ``sim.Fleet.boot(...).run(...)``.
-
-    The engine infers batching from the leading hart dimension, so this is
-    the same code path as :func:`run_until_done`.
-    """
-    return run_until_done(states, max_ticks, chunk)
+# The deprecated raw-dict shims (`make_state`, `run_until_done`,
+# `batched_run_until_done`) were removed: `sim.HartState.fresh` builds
+# power-on state, and runs go through `sim.Fleet` / the pluggable
+# `engine` backends (`engine.JitEngine(donate=False)` is the drop-in for
+# the old non-donating host loop).

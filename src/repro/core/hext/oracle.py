@@ -91,6 +91,47 @@ def reset_state(image) -> Dict:
     }
 
 
+def resume_state(snap: Dict) -> Dict:
+    """Oracle state adopted from a host-side machine snapshot (the
+    ``OracleEngine`` adapter path, and the restore side of a gem5-style
+    checkpoint): same keys as :func:`reset_state`, but every field comes
+    from the snapshot instead of power-on values, so the oracle can take
+    over a run mid-flight.  Values are re-masked to uint64 defensively,
+    and the fixed-size fields (regs, csrs, the by-level counters) are
+    length-checked so a truncated snapshot fails loudly here rather than
+    as an IndexError mid-run (``mem`` is legitimately variable-size)."""
+    if len(snap["regs"]) != 32:
+        raise ValueError(f"regs must have 32 entries, "
+                         f"got {len(snap['regs'])}")
+    if len(snap["csrs"]) != C.N_CSR:
+        raise ValueError(f"csrs must have {C.N_CSR} entries, "
+                         f"got {len(snap['csrs'])}")
+    for k in ("exc_by_level", "int_by_level"):
+        if len(snap[k]) != 3:
+            raise ValueError(f"{k} must have 3 entries (M/HS/VS), "
+                             f"got {len(snap[k])}")
+    return {
+        "pc": u64(int(snap["pc"])),
+        "regs": [u64(int(x)) for x in snap["regs"]],
+        "csrs": [u64(int(x)) for x in snap["csrs"]],
+        "priv": int(snap["priv"]),
+        "virt": bool(snap["virt"]),
+        "mem": [u64(int(w)) for w in snap["mem"]],
+        "halted": bool(snap["halted"]),
+        "done": bool(snap["done"]),
+        "exit_code": u64(int(snap["exit_code"])),
+        "console": int(snap["console"]),
+        "instret": int(snap["instret"]),
+        "instret_virt": int(snap["instret_virt"]),
+        "exc_by_level": [int(x) for x in snap["exc_by_level"]],
+        "int_by_level": [int(x) for x in snap["int_by_level"]],
+        "pagefaults": int(snap["pagefaults"]),
+        "ticks": int(snap["ticks"]),
+        "timer_irqs": int(snap["timer_irqs"]),
+        "ctx_switches": int(snap["ctx_switches"]),
+    }
+
+
 def init_csrs() -> List[int]:
     c = [0] * C.N_CSR
     c[C.R_MISA] = u64((2 << 62) | (1 << 7) | (1 << 8) | (1 << 12) |

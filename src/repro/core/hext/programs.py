@@ -404,6 +404,23 @@ def sched_layout(n: int) -> SchedLayout:
                        mem_words=(win0 + n * GUEST_WIN) // 8)
 
 
+def guest_regions(lay: SchedLayout, g: int):
+    """Byte ``(start, length)`` regions holding guest `g`'s entire
+    migratable state in an N-guest scheduler image: saved context slot,
+    G-stage table block, host-physical window, result mailbox, and the
+    scheduler's per-guest info block.  ``Fleet.migrate_guest`` copies
+    exactly these regions between harts — the addresses are identical on
+    any hart with the same layout, and window-offset G-stage leaves stay
+    valid because ``lay.win[g]`` is layout-determined, not hart-local."""
+    if not 0 <= g < lay.n:
+        raise ValueError(f"guest {g} out of range for N={lay.n}")
+    return ((lay.ctx0 + g * CTX_SIZE, CTX_SIZE),
+            (lay.g_l2[g], GTAB_STRIDE),
+            (lay.win[g], GUEST_WIN),
+            (lay.guest_res + 8 * g, 8),
+            (lay.ginfo0 + g * GINFO_SIZE, GINFO_SIZE))
+
+
 def _build_kernel_pts(img: Image, perms: int):
     """Identity map of kernel/code/PT pages; data pages left invalid
     (demand-paged). Used for both the native satp tables and the guest's

@@ -19,30 +19,37 @@ objects:
   advances every machine in lockstep, ``fleet.counters()`` /
   ``fleet.report()`` read the architectural counters back out.
 
-The run loop lives **on device**: a ``lax.while_loop`` over chunked
-``lax.scan`` s, gated on ``all(done)``, so early exit costs no per-chunk
-host round-trip.  Fleet buffers are donated (``donate_argnums``) so memory
-is updated in place, and the x64 requirement is owned here in one place
-(``Fleet`` methods run under ``jax.experimental.enable_x64``) instead of
-being sprinkled across per-call wrappers.
+Execution is delegated to a pluggable :mod:`repro.core.hext.engine`
+backend (``Fleet.boot(..., engine="jit"|"sharded"|"oracle")``): the
+default ``JitEngine`` runs the donated on-device ``lax.while_loop`` over
+chunked scans, ``ShardedEngine`` pmaps the batch across ``jax.devices()``,
+and ``OracleEngine`` drives the pure-Python reference model behind the
+same typed interface.  On top of the unified state path the fleet offers
+gem5-style checkpointing (``Fleet.snapshot`` / ``Fleet.restore``, a
+versioned ``.npz`` with a schema-hash guard — see
+:mod:`repro.core.hext.checkpoint`) and live guest migration between harts
+(``Fleet.migrate_guest``).  The x64 requirement is owned by the facade and
+the engines in one place instead of being sprinkled across per-call
+wrappers.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.hext import engine as _engine
 from repro.core.hext import machine as _machine
 
 U64 = jnp.uint64
 MASK64 = (1 << 64) - 1
 
 __all__ = ["Counters", "HartState", "Fleet", "HartSpec", "checksum_ok",
-           "run_on_device"]
+           "run_on_device", "StaleHartsError", "MigrationError"]
 
 
 def _x64():
@@ -119,6 +126,9 @@ class Counters:
         with _x64():
             out = {
                 "done": bool(self.done),
+                # masked to uint64 so a report entry can reproduce the
+                # exact checksum its `ok` was computed from
+                "exit_code": int(self.exit_code) & MASK64,
                 "instret": int(self.instret),
                 "instret_virt": int(self.instret_virt),
                 "ticks": int(self.ticks),
@@ -253,61 +263,22 @@ class HartState:
         return HartState.from_raw(_machine.step(self.to_raw()))
 
 
-def _typed_step(state: HartState) -> HartState:
-    return state.step()
-
-
 # ---------------------------------------------------------------------------
-# On-device run loop: while_loop over chunked scans, gated on all(done)
+# run_on_device — thin compat wrapper over the default JitEngine backend
 # ---------------------------------------------------------------------------
-
-def _run_impl(state: HartState, n_chunks, chunk: int) -> HartState:
-    """On-device run loop: `n_chunks` chunk-scans max, early exit once every
-    hart reports done (no per-chunk host sync).  Only `chunk` is static —
-    different tick budgets reuse the same executable."""
-    batched = state.counters.done.ndim == 1
-    step_fn = jax.vmap(_typed_step) if batched else _typed_step
-
-    def scan_body(s, _):
-        return step_fn(s), None
-
-    def cond(carry):
-        s, i = carry
-        return (i < n_chunks) & ~jnp.all(s.counters.done)
-
-    def body(carry):
-        s, i = carry
-        s = jax.lax.scan(scan_body, s, None, length=chunk)[0]
-        return s, i + jnp.ones((), jnp.int32)
-
-    state, _ = jax.lax.while_loop(cond, body,
-                                  (state, jnp.zeros((), jnp.int32)))
-    return state
-
-
-_run_jit_donating = jax.jit(_run_impl, static_argnums=(2,),
-                            donate_argnums=(0,))
-_run_jit = jax.jit(_run_impl, static_argnums=(2,))
-
 
 def run_on_device(state: HartState, max_ticks: int, chunk: int = 4096,
                   donate: bool = True) -> HartState:
     """Run until every hart is done or `max_ticks` elapse — one jitted call.
 
-    Like the legacy host loop, the tick budget rounds up to whole chunks:
-    `ceil(max_ticks / chunk)` scans.  With ``donate`` (the default, used by
-    `Fleet`) the `state` buffers are donated and updated in place, so
-    `state` must not be reused after this call; pass ``donate=False`` when
-    the caller keeps a reference to the input (the legacy shims do).
+    Compat wrapper over ``engine.JitEngine`` (the while-loop over chunked
+    scans now lives in :mod:`repro.core.hext.engine`).  The tick budget
+    rounds up to whole chunks: `ceil(max_ticks / chunk)` scans.  With
+    ``donate`` (the default) the `state` buffers are donated and updated
+    in place, so `state` must not be reused after this call; pass
+    ``donate=False`` when the caller keeps a reference to the input.
     """
-    n_chunks = -(-int(max_ticks) // int(chunk))
-    fn = _run_jit_donating if donate else _run_jit
-    with _x64(), warnings.catch_warnings():
-        # buffer donation is best-effort on some backends (e.g. CPU)
-        warnings.filterwarnings(
-            "ignore", message=".*[Dd]onat.*", category=UserWarning)
-        out = fn(state, jnp.asarray(n_chunks, jnp.int32), int(chunk))
-        return jax.block_until_ready(out)
+    return _engine.JitEngine(donate=donate).run(state, max_ticks, chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -337,6 +308,51 @@ class HartSpec:
         return f"{self.name}/{'guest' if self.guest else 'native'}"
 
 
+class StaleHartsError(RuntimeError):
+    """A ``fleet.harts`` reference was used after a later ``fleet.run``
+    (or ``migrate_guest``) invalidated it (donated buffers)."""
+
+
+class MigrationError(RuntimeError):
+    """A ``Fleet.migrate_guest`` precondition does not hold (wrong slot
+    kind, guest currently scheduled, hart already exited, …)."""
+
+
+class _HartsView:
+    """Generation-checked view of the fleet's batched ``HartState``.
+
+    ``fleet.run`` donates the fleet buffers, so a reference taken before
+    a run points at invalidated memory on backends that honor donation —
+    and at silently *stale* memory on those that don't (CPU).  The view
+    forwards attribute access to the live state while its generation
+    matches, and raises :class:`StaleHartsError` afterwards."""
+
+    __slots__ = ("_fleet", "_gen")
+
+    def __init__(self, fleet: "Fleet", gen: int):
+        object.__setattr__(self, "_fleet", fleet)
+        object.__setattr__(self, "_gen", gen)
+
+    def _live(self) -> HartState:
+        if self._fleet._generation != self._gen:
+            raise StaleHartsError(
+                f"this fleet.harts reference is stale: it was taken at "
+                f"run-generation {self._gen} but the fleet is now at "
+                f"generation {self._fleet._generation} (fleet.run donates "
+                f"its buffers) — re-read fleet.harts after each run")
+        return self._fleet._harts
+
+    def unwrap(self) -> HartState:
+        """The underlying ``HartState`` pytree (generation-checked)."""
+        return self._live()
+
+    def __getattr__(self, name):
+        return getattr(self._live(), name)
+
+    def __repr__(self):
+        return f"<harts view gen={self._gen} of {self._fleet!r}>"
+
+
 class Fleet:
     """A batch of harts simulated in lockstep — the 'gem5 pod'.
 
@@ -345,20 +361,26 @@ class Fleet:
     >>> fleet.report()["crc32/native"]["ok"]
     True
 
-    The fleet owns the x64 context, the batched ``HartState``, and the
-    on-device while-loop engine; consumers never touch raw dicts,
-    ``jnp.stack`` trees, or per-chunk host syncs.
+    The fleet owns the x64 context, the batched ``HartState``, and a
+    pluggable execution backend (``engine=`` — ``"jit"``, ``"sharded"``,
+    ``"oracle"``, or any object with ``run(state, max_ticks, chunk)``);
+    consumers never touch raw dicts, ``jnp.stack`` trees, or per-chunk
+    host syncs.
     """
 
-    def __init__(self, harts: HartState, specs: Sequence[HartSpec]):
+    def __init__(self, harts: HartState, specs: Sequence[HartSpec],
+                 engine: Any = None):
         self._harts = harts
         self._specs = list(specs)
+        self._engine = _engine.resolve(engine)
+        self._generation = 0
 
     # -- construction -------------------------------------------------------
     @classmethod
     def boot(cls, workloads, guest: Union[bool, Sequence[bool]] = False,
              guests_per_hart: int = 1,
-             timeslice: Optional[int] = None) -> "Fleet":
+             timeslice: Optional[int] = None,
+             engine: Any = None) -> "Fleet":
         """Assemble + batch bootable machines, one per workload.
 
         ``workloads`` is a Workload or a sequence of them; ``guest`` is a
@@ -372,6 +394,10 @@ class Fleet:
         every ``timeslice`` ticks.  A slot entry may be a single workload
         (all N guests run it) or a length-N tuple of workloads
         (heterogeneous tenants).
+
+        ``engine`` selects the execution backend (DESIGN.md §3): a
+        registered name (``"jit"`` default, ``"sharded"``, ``"oracle"``)
+        or an :class:`repro.core.hext.engine.Engine` instance.
         """
         wls = list(workloads) if isinstance(workloads, (list, tuple)) \
             else [workloads]
@@ -398,7 +424,7 @@ class Fleet:
                               guests=g, timeslice=ts) for g in groups]
             states = [HartState.boot_preemptive(*g, timeslice=ts)
                       for g in groups]
-            return cls(cls._stack(states), specs)
+            return cls(cls._stack(states), specs, engine=engine)
         guests = list(guest) if isinstance(guest, (list, tuple)) \
             else [bool(guest)] * len(wls)
         if len(guests) != len(wls):
@@ -406,22 +432,24 @@ class Fleet:
                 f"guest has {len(guests)} entries for {len(wls)} workloads")
         specs = [HartSpec(w, g, w.name) for w, g in zip(wls, guests)]
         states = [HartState.boot(w, guest=g) for w, g in zip(wls, guests)]
-        return cls(cls._stack(states), specs)
+        return cls(cls._stack(states), specs, engine=engine)
 
     @classmethod
     def from_states(cls, states: Sequence[HartState],
-                    specs: Optional[Sequence[HartSpec]] = None) -> "Fleet":
+                    specs: Optional[Sequence[HartSpec]] = None,
+                    engine: Any = None) -> "Fleet":
         """Fleet over pre-built states (e.g. hand-assembled test images)."""
         states = list(states)
         if specs is None:
             specs = [HartSpec(None, False, f"hart{i}")
                      for i in range(len(states))]
-        return cls(cls._stack(states), specs)
+        return cls(cls._stack(states), specs, engine=engine)
 
     @classmethod
     def from_images(cls, images: Sequence[Any],
                     mem_words: int = _machine.DEFAULT_MEM_WORDS,
-                    names: Optional[Sequence[str]] = None) -> "Fleet":
+                    names: Optional[Sequence[str]] = None,
+                    engine: Any = None) -> "Fleet":
         """Fleet of fresh harts, each booted from a raw uint64-word image
         (shorter images are zero-padded; an oversized one is an error)."""
         with _x64():
@@ -435,12 +463,13 @@ class Fleet:
                       for im in imgs]
         specs = None if names is None else \
             [HartSpec(None, False, str(n)) for n in names]
-        return cls.from_states(states, specs)
+        return cls.from_states(states, specs, engine=engine)
 
     @classmethod
     def from_corpus(cls, images: Sequence[Any],
                     names: Optional[Sequence[str]] = None,
-                    mem_words: Optional[int] = None) -> "Fleet":
+                    mem_words: Optional[int] = None,
+                    engine: Any = None) -> "Fleet":
         """Batch a scenario corpus (possibly differently-sized images) as
         ONE fleet: every image is zero-padded to a common word count so the
         whole corpus traces to a single XLA executable — the batched-fuzz
@@ -454,7 +483,8 @@ class Fleet:
             mem_words = 1 << max(m - 1, 1).bit_length()
         if names is None:
             names = [f"case{i}" for i in range(len(images))]
-        return cls.from_images(images, mem_words, names=names)
+        return cls.from_images(images, mem_words, names=names,
+                               engine=engine)
 
     @staticmethod
     def _stack(states: Sequence[HartState]) -> HartState:
@@ -465,19 +495,163 @@ class Fleet:
 
     # -- running ------------------------------------------------------------
     def run(self, max_ticks: int, chunk: int = 4096) -> "Fleet":
-        """Advance the whole fleet (early exit on-device, buffers donated)."""
-        self._harts = run_on_device(self._harts, max_ticks, chunk)
+        """Advance the whole fleet through the selected engine backend.
+
+        Bumps the run generation: every previously handed-out
+        ``fleet.harts`` view is invalidated (the default engine donates
+        the fleet buffers) and raises :class:`StaleHartsError` on access.
+        """
+        self._harts = self._engine.run(self._harts, max_ticks, chunk=chunk)
+        self._generation += 1
+        return self
+
+    # -- gem5-style checkpoint / restore ------------------------------------
+    def snapshot(self, path) -> str:
+        """Persist the full fleet state as a versioned ``.npz`` checkpoint
+        (every ``HartState`` leaf + ``HartSpec`` metadata + a schema-hash
+        guard — :mod:`repro.core.hext.checkpoint`).  A restored fleet
+        resumes bit-identically to an uninterrupted run."""
+        from repro.core.hext import checkpoint
+        return checkpoint.save(
+            str(path), self._harts, self._specs,
+            engine_name=getattr(self._engine, "name", "custom"))
+
+    @classmethod
+    def restore(cls, path, specs: Optional[Sequence[HartSpec]] = None,
+                engine: Any = None) -> "Fleet":
+        """Rebuild a fleet from a :meth:`snapshot` checkpoint.
+
+        Specs are restored by workload *name* via the standard registry;
+        pass ``specs=`` explicitly when the snapshot ran custom workload
+        objects the registry cannot resolve.  Raises
+        :class:`repro.core.hext.checkpoint.CheckpointError` on corrupted
+        or schema-incompatible files."""
+        from repro.core.hext import checkpoint
+        harts, saved_specs = checkpoint.load(str(path),
+                                             decode_specs=specs is None)
+        if specs is None:
+            specs = saved_specs
+        specs = list(specs)
+        n = int(harts.counters.done.shape[0])
+        if len(specs) != n:
+            raise ValueError(f"{len(specs)} specs for {n} restored harts")
+        return cls(harts, specs, engine=engine)
+
+    # -- live guest migration (the gem5 'switch CPU / move work' demo) ------
+    def migrate_guest(self, src: int, dst: int, guest: int = 0) -> "Fleet":
+        """Move a descheduled guest VM from hart `src` to hart `dst`.
+
+        Lifts guest slot ``guest``'s entire migratable state out of the
+        source hart's memory — saved context (GPRs + sepc + the VS CSR
+        bank + the frozen virtual clock), private G-stage table block,
+        64 KiB physical window (kernel + workload + VS tables + data),
+        result mailbox, and scheduler info block — and injects it at the
+        same addresses in the destination hart (`programs.guest_regions`).
+        The destination's scheduler picks the guest up at its next switch
+        and resumes it mid-flight; the context's frozen virtual time
+        rebuilds ``htimedelta`` against the destination's own ``mtime``,
+        so the guest's clock survives the move.  On the source the slot is
+        marked done with a zeroed mailbox (migrated away), and both specs
+        are updated so ``report()`` checks the guest's golden on its new
+        hart.
+
+        The destination slot's own tenant is **discarded**: its context,
+        window, tables, and mailbox are overwritten and its spec entry is
+        replaced by the migrated workload (the evacuation semantics the
+        demo wants — migrate into a slot whose tenant has finished, or
+        accept losing it).
+
+        Preconditions (else :class:`MigrationError`): both slots are
+        preemptive, neither hart has exited, both harts are paused while
+        *executing guest code* (V=1 — a hart paused inside the HS
+        scheduler may have a context switch in flight, making both
+        ``SCHED_CUR`` and the context slots non-authoritative), and the
+        guest is live and not currently scheduled on either hart.
+        """
+        from repro.core.hext import programs
+        if src == dst:
+            raise MigrationError("src and dst must be different harts")
+        for i in (src, dst):
+            if not (0 <= i < len(self._specs)):
+                raise MigrationError(f"hart {i} out of range")
+            if not self._specs[i].preemptive:
+                raise MigrationError(
+                    f"hart {i} ({self._specs[i].label}) is not a "
+                    f"preemptive multi-guest slot")
+        s_spec, d_spec = self._specs[src], self._specs[dst]
+        n = len(s_spec.guests)
+        if not 0 <= guest < n:
+            raise MigrationError(f"guest {guest} out of range for N={n}")
+        if s_spec.guests[guest] is None:
+            raise MigrationError(
+                f"hart {src} guest {guest} was already migrated away")
+        lay = programs.sched_layout(n)
+        with _x64():
+            mem = np.array(self._harts.mem)       # writable host copy
+            done = np.asarray(self._harts.counters.done)
+            virt = np.asarray(self._harts.virt)
+            for i in (src, dst):
+                if done[i]:
+                    raise MigrationError(f"hart {i} has already exited")
+                if not bool(virt[i]):
+                    # paused in M firmware or inside the HS scheduler: a
+                    # context switch may be in flight (target chosen but
+                    # SCHED_CUR not yet updated), so neither SCHED_CUR
+                    # nor the context slots are authoritative
+                    raise MigrationError(
+                        f"hart {i} is not executing guest code (V=0 — "
+                        f"possibly mid context-switch); run a little "
+                        f"longer and retry")
+                if int(mem[i, programs.SCHED_CUR >> 3]) == guest:
+                    raise MigrationError(
+                        f"guest {guest} is currently scheduled on hart "
+                        f"{i}; migrate only descheduled guests (run a "
+                        f"little longer and retry)")
+            gi_done_w = (lay.ginfo0 + guest * programs.GINFO_SIZE + 24) >> 3
+            if int(mem[src, gi_done_w]) != 0:
+                raise MigrationError(
+                    f"hart {src} guest {guest} already finished — "
+                    f"nothing to migrate")
+            for base, size in programs.guest_regions(lay, guest):
+                w0, w1 = base >> 3, (base + size) >> 3
+                mem[dst, w0:w1] = mem[src, w0:w1]
+            # source: slot is gone — mark done, zero the mailbox so the
+            # hart's combined exit checksum covers only remaining guests
+            mem[src, gi_done_w] = 1
+            mem[src, (lay.guest_res + 8 * guest) >> 3] = 0
+            self._harts = self._harts.replace(mem=jnp.asarray(mem, U64))
+        self._generation += 1          # invalidate handed-out views
+
+        def respec(spec: HartSpec, new_guests: tuple) -> HartSpec:
+            name = "+".join(w.name if w is not None else "moved"
+                            for w in new_guests)
+            return dataclasses.replace(spec, guests=new_guests,
+                                       workload=new_guests[0], name=name)
+
+        moved = s_spec.guests[guest]
+        s_guests = tuple(None if k == guest else w
+                         for k, w in enumerate(s_spec.guests))
+        d_guests = tuple(moved if k == guest else w
+                         for k, w in enumerate(d_spec.guests))
+        self._specs[src] = respec(s_spec, s_guests)
+        self._specs[dst] = respec(d_spec, d_guests)
         return self
 
     # -- inspection ---------------------------------------------------------
     @property
-    def harts(self) -> HartState:
-        """The batched state (leading dim = fleet size).
+    def engine(self) -> Any:
+        """The resolved execution backend this fleet runs on."""
+        return self._engine
 
-        WARNING: ``fleet.run`` donates these buffers (in-place update), so
-        on backends that honor donation a reference taken *before* a run is
-        invalidated by it.  Re-read ``fleet.harts`` after each run."""
-        return self._harts
+    @property
+    def harts(self) -> "_HartsView":
+        """Generation-checked view of the batched state (leading dim =
+        fleet size).  ``fleet.run`` donates the underlying buffers, so a
+        view taken *before* a run raises :class:`StaleHartsError` after
+        it instead of silently reading stale (or freed) memory — re-read
+        ``fleet.harts`` after each run.  Use ``.unwrap()`` (or
+        ``fleet[i]``) when the raw pytree is needed."""
+        return _HartsView(self, self._generation)
 
     @property
     def specs(self) -> List[HartSpec]:
@@ -506,7 +680,13 @@ class Fleet:
                        c: Counters) -> Dict[str, Any]:
         """Report entry for an N-guest slot: per-guest checksum mailboxes
         are read straight from the hart's memory (the HS scheduler records
-        each guest's result before combining them into the exit code)."""
+        each guest's result before combining them into the exit code).
+
+        A ``None`` guest entry is a slot whose VM was migrated away
+        (:meth:`migrate_guest`): its mailbox was zeroed, it contributes
+        nothing to the expected combined checksum, and its ``ok_guests``
+        entry reports ``None`` (not checked here — the VM's golden is
+        checked on its destination hart)."""
         from repro.core.hext import programs
         n = len(spec.guests)
         lay = programs.sched_layout(n)
@@ -514,16 +694,19 @@ class Fleet:
             res_w = lay.guest_res // 8
             cks = [int(self._harts.mem[i, res_w + k]) & MASK64
                    for k in range(n)]
-        goldens = [int(w.golden()) & MASK64 for w in spec.guests]
-        oks = [ck == g for ck, g in zip(cks, goldens)]
-        total = sum(goldens) & MASK64
+        goldens = [None if w is None else int(w.golden()) & MASK64
+                   for w in spec.guests]
+        oks = [None if g is None else ck == g
+               for ck, g in zip(cks, goldens)]
+        total = sum(g for g in goldens if g is not None) & MASK64
         entry = c.to_dict()
         entry.update({
             "golden": total,
             "guests": n,
             "checksums": cks,
             "ok_guests": oks,
-            "ok": bool(c.done) and all(oks) and c.ok(total),
+            "ok": bool(c.done) and all(o for o in oks if o is not None)
+            and c.ok(total),
             "timeslice": spec.timeslice,
         })
         if n == 2:       # legacy 2-guest report keys

@@ -19,7 +19,9 @@ exactly.
 The whole corpus boots as ONE batched ``Fleet`` (images padded to a
 common memory size so XLA compiles a single executable — see the
 recompile pitfall in DESIGN.md §5) and is diffed hart-by-hart against
-the pure-Python oracle (``repro.core.hext.oracle``).
+the pure-Python oracle.  Both legs go through the same first-class
+``Fleet`` path: the reference leg is simply the corpus fleet re-run on
+the ``OracleEngine`` backend (``engine="oracle"``, DESIGN.md §3).
 
 Repro workflow::
 
@@ -38,6 +40,7 @@ import numpy as np
 
 from repro.core.hext import csr as C
 from repro.core.hext import oracle
+from repro.core.hext.engine import DIFF_COUNTERS as _COUNTERS
 from repro.core.hext.programs import (Asm, Image, G_L0, G_L1, G_L2,
                                       S_L0, S_L1, S_L2, SATP_SV39,
                                       PTE_V, PTE_R, PTE_W, PTE_X, PTE_U,
@@ -531,71 +534,87 @@ def generate(seed: int, count: int) -> List[Scenario]:
 # differential run + diff
 # ---------------------------------------------------------------------------
 
-_COUNTERS = ("instret", "instret_virt", "pagefaults", "ticks", "timer_irqs",
-             "ctx_switches")
-# `walks` is microarchitectural (TLB hit/miss) — deliberately not compared.
+# the comparison scope is defined ONCE in engine.py (shared with
+# `engine.diff_states`); `walks`/TLB are microarchitectural and excluded
 
 
-def _machine_final(scenarios: List[Scenario], max_ticks: int,
-                   chunk: int) -> Dict[str, np.ndarray]:
-    """Boot the corpus as one batched Fleet and return final-state arrays."""
-    import jax
+def _final_arrays(fleet) -> Dict[str, np.ndarray]:
+    """Extract a fleet's final state as host arrays (one batched copy)."""
+    from repro.core.hext import engine as _engine
+    return _engine.state_arrays(fleet.harts.unwrap())
+
+
+def _run_corpus_fleet(scenarios: List[Scenario], max_ticks: int,
+                      chunk: int, engine=None) -> Dict[str, np.ndarray]:
+    """Boot the corpus as one batched Fleet on the given engine backend
+    and return final-state arrays.  ``engine=None`` is the jitted device
+    model; ``engine="oracle"`` is the pure-Python reference — both legs of
+    the differential run now go through the same first-class ``Fleet``
+    path (DESIGN.md §3)."""
     from repro.core.hext.sim import Fleet
     fleet = Fleet.from_corpus([s.image for s in scenarios],
                               names=[s.name for s in scenarios],
-                              mem_words=T_MEM_WORDS)
+                              mem_words=T_MEM_WORDS, engine=engine)
     fleet.run(max_ticks, chunk=chunk)
-    h = fleet.harts
-    with jax.experimental.enable_x64():
-        out = {
-            "pc": np.asarray(h.pc), "regs": np.asarray(h.regs),
-            "csrs": np.asarray(h.csrs), "priv": np.asarray(h.priv),
-            "virt": np.asarray(h.virt), "halted": np.asarray(h.halted),
-            "mem": np.asarray(h.mem), "console": np.asarray(h.console),
-            "done": np.asarray(h.counters.done),
-            "exit_code": np.asarray(h.counters.exit_code),
-            "exc_by_level": np.asarray(h.counters.exc_by_level),
-            "int_by_level": np.asarray(h.counters.int_by_level),
-        }
-        for k in _COUNTERS:
-            out[k] = np.asarray(getattr(h.counters, k))
+    return _final_arrays(fleet)
+
+
+def _check_reset_parity() -> None:
+    """The OracleEngine reference leg *adopts* the machine's boot state
+    (``resume_state``), which would hide exactly one class of bug: a
+    machine reset-state divergence.  Guard it by diffing one fresh
+    machine boot against the oracle's own independent reset (non-mem
+    reset state is image-independent, so one check covers the corpus —
+    and keeps the single-case ``--case`` repro path, which runs
+    ``oracle.run`` from the oracle's reset, equivalent to the corpus
+    leg)."""
+    from repro.core.hext import engine as _engine
+    from repro.core.hext.sim import HartState
+    img = np.zeros(64, dtype=np.uint64)
+    mach = _engine.state_arrays(HartState.fresh(64))
+    orac = _oracle_arrays(oracle.reset_state(img))
+    d = _engine.diff_arrays(mach, 0, orac, 0)
+    if d:
+        raise AssertionError(
+            f"machine reset state diverged from the oracle's independent "
+            f"reset: {d[:4]}")
+
+
+def _oracle_arrays(ost: Dict) -> Dict[str, np.ndarray]:
+    """Shape one oracle final state like a batch-of-1 `_final_arrays`."""
+    out = {
+        "pc": np.array([ost["pc"]], dtype=np.uint64),
+        "regs": np.array([ost["regs"]], dtype=np.uint64),
+        "csrs": np.array([ost["csrs"]], dtype=np.uint64),
+        "priv": np.array([ost["priv"]]),
+        "virt": np.array([1 if ost["virt"] else 0]),
+        "halted": np.array([1 if ost["halted"] else 0]),
+        "mem": np.array([ost["mem"]], dtype=np.uint64),
+        "console": np.array([ost["console"]]),
+        "done": np.array([1 if ost["done"] else 0]),
+        "exit_code": np.array([ost["exit_code"]], dtype=np.uint64),
+        "exc_by_level": np.array([ost["exc_by_level"]]),
+        "int_by_level": np.array([ost["int_by_level"]]),
+    }
+    for k in _COUNTERS:
+        out[k] = np.array([ost[k]])
     return out
 
 
+def diff_pair(mach: Dict[str, np.ndarray], i: int,
+              orac: Dict[str, np.ndarray], j: int) -> List[str]:
+    """Compare machine hart `i` against oracle hart `j`, field by field —
+    a thin wrapper over the single shared comparison core
+    (`engine.diff_arrays`; in the output `a` is the machine, `b` the
+    oracle; `walks`/TLB excluded by design)."""
+    from repro.core.hext.engine import diff_arrays
+    return diff_arrays(mach, i, orac, j)
+
+
 def diff_case(mach: Dict[str, np.ndarray], i: int, ost: Dict) -> List[str]:
-    """Compare machine hart `i` against an oracle final state."""
-    d: List[str] = []
-
-    def chk(name, got, want):
-        if int(got) != int(want):
-            d.append(f"{name}: machine={int(got):#x} oracle={int(want):#x}")
-
-    chk("pc", mach["pc"][i], ost["pc"])
-    chk("priv", mach["priv"][i], ost["priv"])
-    chk("virt", mach["virt"][i], 1 if ost["virt"] else 0)
-    chk("halted", mach["halted"][i], 1 if ost["halted"] else 0)
-    chk("done", mach["done"][i], 1 if ost["done"] else 0)
-    chk("exit_code", mach["exit_code"][i], ost["exit_code"])
-    chk("console", mach["console"][i], ost["console"])
-    for r in range(1, 32):
-        chk(f"x{r}", mach["regs"][i, r], ost["regs"][r])
-    for idx in range(C.N_CSR):
-        chk(f"csr[{idx}]", mach["csrs"][i, idx], ost["csrs"][idx])
-    for k in _COUNTERS:
-        chk(k, mach[k][i], ost[k])
-    for lvl, nm in enumerate(("M", "HS", "VS")):
-        chk(f"exc@{nm}", mach["exc_by_level"][i, lvl],
-            ost["exc_by_level"][lvl])
-        chk(f"int@{nm}", mach["int_by_level"][i, lvl],
-            ost["int_by_level"][lvl])
-    mmem = mach["mem"][i]
-    omem = np.asarray(ost["mem"], dtype=np.uint64)
-    bad = np.nonzero(mmem != omem)[0]
-    if bad.size:
-        w = int(bad[0])
-        d.append(f"mem[{w * 8:#x}]: machine={int(mmem[w]):#x} "
-                 f"oracle={int(omem[w]):#x} (+{bad.size - 1} more words)")
-    return d
+    """Compare machine hart `i` against an oracle final-state dict (the
+    single-case repro path)."""
+    return diff_pair(mach, i, _oracle_arrays(ost), 0)
 
 
 def run_corpus(seed: int, count: int, max_ticks: int = MAX_TICKS,
@@ -605,17 +624,19 @@ def run_corpus(seed: int, count: int, max_ticks: int = MAX_TICKS,
     # oracle must run the exact same tick count or budget-burning
     # scenarios would report phantom mismatches
     max_ticks = -(-int(max_ticks) // int(chunk)) * int(chunk)
+    _check_reset_parity()
     t0 = time.time()
     scenarios = generate(seed, count)
     t_gen = time.time() - t0
     t0 = time.time()
-    mach = _machine_final(scenarios, max_ticks, chunk)
+    mach = _run_corpus_fleet(scenarios, max_ticks, chunk)
     t_mach = time.time() - t0
+    # the reference leg: the SAME corpus fleet on the OracleEngine backend
     t0 = time.time()
+    orac = _run_corpus_fleet(scenarios, max_ticks, chunk, engine="oracle")
     failures = []
     for i, s in enumerate(scenarios):
-        ost = oracle.run(s.image, max_ticks)
-        d = diff_case(mach, i, ost)
+        d = diff_pair(mach, i, orac, i)
         if d:
             failures.append({"case": s.case, "mode": s.cfg["mode"],
                              "repro": repro_line(seed, s.case),
@@ -653,7 +674,7 @@ def _case_main(seed: int, case: int, max_ticks: int, verbose: bool,
     print(f"case {case} of seed {seed}: mode={s.cfg['mode']} "
           f"satp={s.cfg['satp']} vsatp={s.cfg['vsatp']} "
           f"hgatp={s.cfg['hgatp']}")
-    mach = _machine_final([s], max_ticks, CHUNK)
+    mach = _run_corpus_fleet([s], max_ticks, CHUNK)
     ost = oracle.run(s.image, max_ticks)
     d = diff_case(mach, 0, ost)
     if verbose or d:

@@ -74,6 +74,20 @@ def test_fleet_golden_checks(fleet_and_legacy):
         assert entry["ok"] and entry["done"]
 
 
+def test_to_dict_exit_code_reproduces_checksum(fleet_and_legacy):
+    """A report entry must carry the exact uint64 checksum its `ok` was
+    computed from (`exit_code`), so the committed benchmark records are
+    self-verifying: checksum_ok(entry['exit_code'], entry['golden'])."""
+    pairs, fleet, _ = fleet_and_legacy
+    for (w, _), c in zip(pairs, fleet.counters()):
+        d = c.to_dict(w.golden())
+        assert d["exit_code"] == int(c.exit_code) & ((1 << 64) - 1)
+        assert checksum_ok(d["exit_code"], w.golden()) == d["ok"]
+    for entry in fleet.report().values():
+        assert "exit_code" in entry
+        assert checksum_ok(entry["exit_code"], entry["golden"])
+
+
 def test_counters_ok_is_mod_2_64():
     # one canonical uint64 comparison: both sides reduced mod 2**64
     assert checksum_ok(0, 1 << 64)

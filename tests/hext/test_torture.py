@@ -89,22 +89,10 @@ def _oracle_final(case: int):
 
 
 def _as_machine_arrays(ost):
-    """Shape an oracle final state like `_machine_final`'s batch-of-1."""
-    return {
-        "pc": np.array([ost["pc"]], dtype=np.uint64),
-        "regs": np.array([ost["regs"]], dtype=np.uint64),
-        "csrs": np.array([ost["csrs"]], dtype=np.uint64),
-        "priv": np.array([ost["priv"]]),
-        "virt": np.array([ost["virt"]]),
-        "halted": np.array([ost["halted"]]),
-        "mem": np.array([ost["mem"]], dtype=np.uint64),
-        "console": np.array([ost["console"]]),
-        "done": np.array([ost["done"]]),
-        "exit_code": np.array([ost["exit_code"]], dtype=np.uint64),
-        "exc_by_level": np.array([ost["exc_by_level"]]),
-        "int_by_level": np.array([ost["int_by_level"]]),
-        **{k: np.array([ost[k]]) for k in torture._COUNTERS},
-    }
+    """Shape an oracle final state like `_final_arrays`' batch-of-1 —
+    the production conversion itself, so the mutation tests validate the
+    exact shape the diff path consumes."""
+    return torture._oracle_arrays(ost)
 
 
 def test_identical_states_diff_clean():
