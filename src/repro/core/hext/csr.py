@@ -22,11 +22,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-U64 = jnp.uint64
-
-
-def u64(x) -> jnp.ndarray:
-    return jnp.asarray(x, U64)
+from repro.core.hext.bits import U64, u64
 
 
 # --- privilege encodings ----------------------------------------------------

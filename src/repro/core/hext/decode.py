@@ -1,0 +1,182 @@
+"""Table-driven instruction decode → flat micro-op record (DESIGN.md §7).
+
+The old decode was a stack of nested ``op == const`` predicate chains
+interleaved through one 650-line executor.  This module factors the
+decode into its own pipeline stage: host-built numpy lookup tables over
+the 7-bit major opcode are gathered with ``jnp.take`` to expand each
+32-bit instruction word into a :class:`MicroOp` — opclass index,
+register selects, funct fields, and the format-selected immediate — and
+the executor becomes a set of uniform per-opclass contributors keyed on
+``uop.cls`` (see ``isa.execute_uop``).
+
+The same tables back :func:`decode_word`, a pure-Python (no-JAX) decoder
+importable by the oracle differ and the decode-table property tests, so
+the traced and host decoders can never drift structurally.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hext.bits import sext, u64
+
+# --- opclass indices ---------------------------------------------------------
+# ~a dozen uniform classes; the executor dispatches one contributor per
+# class (masked merge — under vmap a lax.switch degenerates to computing
+# every branch anyway, so the merge IS the dispatch; the real
+# short-circuiting happens at batch level in machine.step's cond-gated
+# SYS/trap/walk phases).
+(CLS_ILLEGAL, CLS_ALU, CLS_ALU32, CLS_LUI, CLS_AUIPC, CLS_JAL, CLS_JALR,
+ CLS_BRANCH, CLS_LOAD, CLS_STORE, CLS_SYSTEM, CLS_FENCE,
+ N_CLS) = range(13)
+
+CLS_NAMES = ("illegal", "alu", "alu32", "lui", "auipc", "jal", "jalr",
+             "branch", "load", "store", "system", "fence")
+
+# --- immediate formats -------------------------------------------------------
+(IMM_NONE, IMM_I, IMM_S, IMM_B, IMM_U, IMM_J, N_IMM) = range(7)
+
+# --- host-built lookup tables over the 7-bit major opcode -------------------
+_OPC = {
+    0x33: (CLS_ALU, IMM_NONE),      # OP
+    0x13: (CLS_ALU, IMM_I),         # OP-IMM
+    0x3B: (CLS_ALU32, IMM_NONE),    # OP-32
+    0x1B: (CLS_ALU32, IMM_I),       # OP-IMM-32
+    0x37: (CLS_LUI, IMM_U),
+    0x17: (CLS_AUIPC, IMM_U),
+    0x6F: (CLS_JAL, IMM_J),
+    0x67: (CLS_JALR, IMM_I),
+    0x63: (CLS_BRANCH, IMM_B),
+    0x03: (CLS_LOAD, IMM_I),
+    0x23: (CLS_STORE, IMM_S),
+    0x73: (CLS_SYSTEM, IMM_NONE),   # CSR / priv / hlv-hsv / fences(V)
+    0x0F: (CLS_FENCE, IMM_NONE),    # FENCE / FENCE.I: architectural no-op
+}
+
+OPCLASS_TAB = np.zeros(128, np.int32)
+IMMFMT_TAB = np.zeros(128, np.int32)
+for _op, (_cls, _fmt) in _OPC.items():
+    OPCLASS_TAB[_op] = _cls
+    IMMFMT_TAB[_op] = _fmt
+
+# uses-immediate-as-ALU-operand (OP-IMM forms): imm replaces rs2
+ALU_IMM_TAB = np.zeros(128, bool)
+ALU_IMM_TAB[0x13] = ALU_IMM_TAB[0x1B] = True
+
+
+class MicroOp(NamedTuple):
+    """Flat decoded record for one 32-bit instruction word.
+
+    All fields are per-hart scalars (or a leading batch dim): ``cls`` is
+    the opclass index (``CLS_*``), ``rd``/``rs1``/``rs2`` are register
+    selects (int32), ``f3``/``f7`` the funct fields (uint64 to match the
+    executor's compares), ``imm`` the format-selected immediate (uint64,
+    sign-extended), ``alu_imm`` whether the ALU b-operand is ``imm``
+    (OP-IMM forms), and ``instr`` the raw word (tval/tinst material).
+    """
+
+    cls: jnp.ndarray      # int32 opclass
+    rd: jnp.ndarray       # int32
+    rs1: jnp.ndarray      # int32
+    rs2: jnp.ndarray      # int32
+    f3: jnp.ndarray       # uint64
+    f7: jnp.ndarray       # uint64
+    imm: jnp.ndarray      # uint64 (sign-extended per format)
+    alu_imm: jnp.ndarray  # bool: ALU b-operand is imm
+    instr: jnp.ndarray    # uint64 raw instruction word
+
+
+_OPCLASS_J = jnp.asarray(OPCLASS_TAB)
+_IMMFMT_J = jnp.asarray(IMMFMT_TAB)
+_ALUIMM_J = jnp.asarray(ALU_IMM_TAB)
+
+
+def imm_fields(instr):
+    """The five immediate encodings of `instr` (each sign-extended)."""
+    imm_i = sext(instr >> u64(20), 12)
+    imm_s = sext(((instr >> u64(20)) & ~u64(0x1F)) |
+                 ((instr >> u64(7)) & u64(0x1F)), 12)
+    imm_b = sext((((instr >> u64(31)) & u64(1)) << u64(12)) |
+                 (((instr >> u64(7)) & u64(1)) << u64(11)) |
+                 (((instr >> u64(25)) & u64(0x3F)) << u64(5)) |
+                 (((instr >> u64(8)) & u64(0xF)) << u64(1)), 13)
+    imm_u = sext(instr & u64(0xFFFFF000), 32)
+    imm_j = sext((((instr >> u64(31)) & u64(1)) << u64(20)) |
+                 (((instr >> u64(12)) & u64(0xFF)) << u64(12)) |
+                 (((instr >> u64(20)) & u64(1)) << u64(11)) |
+                 (((instr >> u64(21)) & u64(0x3FF)) << u64(1)), 21)
+    return imm_i, imm_s, imm_b, imm_u, imm_j
+
+
+def decode(instr) -> MicroOp:
+    """Expand one instruction word into a :class:`MicroOp` (traced).
+
+    Table gathers (``jnp.take``) pick the opclass and immediate format;
+    register/funct fields are fixed-position extracts.  Works on scalar
+    words; vmap for a batch.
+    """
+    instr = u64(instr)
+    op7 = (instr & u64(0x7F)).astype(jnp.int32)
+    cls = jnp.take(_OPCLASS_J, op7)
+    fmt = jnp.take(_IMMFMT_J, op7)
+    alu_imm = jnp.take(_ALUIMM_J, op7)
+    imm_i, imm_s, imm_b, imm_u, imm_j = imm_fields(instr)
+    imm = jnp.take(jnp.stack([u64(0), imm_i, imm_s, imm_b, imm_u, imm_j]),
+                   fmt)
+    return MicroOp(
+        cls=cls,
+        rd=((instr >> u64(7)) & u64(31)).astype(jnp.int32),
+        rs1=((instr >> u64(15)) & u64(31)).astype(jnp.int32),
+        rs2=((instr >> u64(20)) & u64(31)).astype(jnp.int32),
+        f3=(instr >> u64(12)) & u64(7),
+        f7=(instr >> u64(25)) & u64(0x7F),
+        imm=imm,
+        alu_imm=alu_imm,
+        instr=instr,
+    )
+
+
+# ---------------------------------------------------------------------------
+# pure-Python decoder over the SAME tables (oracle differ / property tests)
+# ---------------------------------------------------------------------------
+
+def _sext_py(x: int, bits: int) -> int:
+    x &= (1 << bits) - 1
+    m = 1 << (bits - 1)
+    return ((x ^ m) - m) & ((1 << 64) - 1)
+
+
+def decode_word(word: int) -> dict:
+    """Host-side decode of one instruction word via the same tables.
+
+    Returns a plain dict mirroring :class:`MicroOp` (ints), so the
+    oracle differ and the decode-table sweep tests can compare the
+    traced decode against an independent reference without JAX.
+    """
+    word &= 0xFFFFFFFF
+    op7 = word & 0x7F
+    fmt = int(IMMFMT_TAB[op7])
+    imm_i = _sext_py(word >> 20, 12)
+    imm_s = _sext_py(((word >> 20) & ~0x1F) | ((word >> 7) & 0x1F), 12)
+    imm_b = _sext_py((((word >> 31) & 1) << 12) | (((word >> 7) & 1) << 11) |
+                     (((word >> 25) & 0x3F) << 5) |
+                     (((word >> 8) & 0xF) << 1), 13)
+    imm_u = _sext_py(word & 0xFFFFF000, 32)
+    imm_j = _sext_py((((word >> 31) & 1) << 20) |
+                     (((word >> 12) & 0xFF) << 12) |
+                     (((word >> 20) & 1) << 11) |
+                     (((word >> 21) & 0x3FF) << 1), 21)
+    imm = (0, imm_i, imm_s, imm_b, imm_u, imm_j)[fmt]
+    return {
+        "cls": int(OPCLASS_TAB[op7]),
+        "rd": (word >> 7) & 31,
+        "rs1": (word >> 15) & 31,
+        "rs2": (word >> 20) & 31,
+        "f3": (word >> 12) & 7,
+        "f7": (word >> 25) & 0x7F,
+        "imm": imm,
+        "alu_imm": bool(ALU_IMM_TAB[op7]),
+        "instr": word,
+    }

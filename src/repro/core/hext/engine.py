@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hext import csr as C
+from repro.core.hext import machine as _machine
 from repro.core.hext import oracle as _oracle
 
 U64 = jnp.uint64
@@ -80,16 +81,35 @@ def _is_batched(state) -> bool:
 # ShardedEngine): while_loop over chunked scans, gated on all(done)
 # ---------------------------------------------------------------------------
 
-def _run_impl(state, n_chunks, chunk: int):
+def _run_impl(state, n_chunks, chunk: int, ips: int = 1):
     """`n_chunks` chunk-scans max, early exit once every hart reports done
-    (no per-chunk host sync).  Only `chunk` is static — different tick
-    budgets reuse the same executable."""
+    (no per-chunk host sync).  Only `chunk`/`ips` are static — different
+    tick budgets reuse the same executable.
+
+    A batched state runs ``machine.step_batched`` directly: the pipeline's
+    batch-level ``lax.cond`` fast paths (walk skip, SYSTEM skip, trap
+    skip) survive only as real HLO conditionals — wrapping the scalar step
+    in ``vmap`` would lower every cond to compute-both-branches and give
+    back the cost the pipeline removed.
+
+    ``ips`` (instrs_per_step) unrolls that many architectural ticks into
+    one scan element, shrinking the scan to ``chunk // ips`` elements —
+    less per-element scan/dispatch overhead at the price of a bigger
+    step graph.  Tick semantics are unchanged (each chunk-scan still
+    advances exactly ``chunk`` ticks); results are bit-identical by
+    construction because the unrolled body is the same step composed."""
     batched = _is_batched(state)
-    step_fn = jax.vmap(lambda s: s.step()) if batched else \
-        (lambda s: s.step())
+    if batched:
+        def step_fn(s):
+            return type(s).from_raw(_machine.step_batched(s.to_raw()))
+    else:
+        def step_fn(s):
+            return s.step()
 
     def scan_body(s, _):
-        return step_fn(s), None
+        for _ in range(ips):
+            s = step_fn(s)
+        return s, None
 
     def cond(carry):
         s, i = carry
@@ -97,7 +117,7 @@ def _run_impl(state, n_chunks, chunk: int):
 
     def body(carry):
         s, i = carry
-        s = jax.lax.scan(scan_body, s, None, length=chunk)[0]
+        s = jax.lax.scan(scan_body, s, None, length=chunk // ips)[0]
         return s, i + jnp.ones((), jnp.int32)
 
     state, _ = jax.lax.while_loop(cond, body,
@@ -105,9 +125,17 @@ def _run_impl(state, n_chunks, chunk: int):
     return state
 
 
-_run_jit_donating = jax.jit(_run_impl, static_argnums=(2,),
+def _check_ips(chunk: int, ips: int) -> int:
+    ips = int(ips)
+    if ips < 1 or int(chunk) % ips != 0:
+        raise ValueError(
+            f"instrs_per_step must divide chunk: chunk={chunk} ips={ips}")
+    return ips
+
+
+_run_jit_donating = jax.jit(_run_impl, static_argnums=(2, 3),
                             donate_argnums=(0,))
-_run_jit = jax.jit(_run_impl, static_argnums=(2,))
+_run_jit = jax.jit(_run_impl, static_argnums=(2, 3))
 
 
 # ---------------------------------------------------------------------------
@@ -167,17 +195,19 @@ class JitEngine:
 
     name = "jit"
 
-    def __init__(self, donate: bool = True):
+    def __init__(self, donate: bool = True, instrs_per_step: int = 1):
         self._donate = donate
+        self._ips = int(instrs_per_step)
 
     def run(self, state, max_ticks: int, chunk: int = 4096):
+        ips = _check_ips(chunk, self._ips)
         fn = _run_jit_donating if self._donate else _run_jit
         with _x64(), warnings.catch_warnings():
             # buffer donation is best-effort on some backends (e.g. CPU)
             warnings.filterwarnings(
                 "ignore", message=".*[Dd]onat.*", category=UserWarning)
             out = fn(state, jnp.asarray(_n_chunks(max_ticks, chunk),
-                                        jnp.int32), int(chunk))
+                                        jnp.int32), int(chunk), ips)
             return jax.block_until_ready(out)
 
 
@@ -188,12 +218,12 @@ class JitEngine:
 _pmap_cache: Dict[Any, Any] = {}
 
 
-def _pmap_fn(chunk: int, devices: tuple):
-    key = (chunk, devices)
+def _pmap_fn(chunk: int, devices: tuple, ips: int = 1):
+    key = (chunk, devices, ips)
     fn = _pmap_cache.get(key)
     if fn is None:
         fn = jax.pmap(_run_impl, in_axes=(0, None),
-                      static_broadcasted_argnums=(2,),
+                      static_broadcasted_argnums=(2, 3),
                       devices=list(devices))
         _pmap_cache[key] = fn
     return fn
@@ -213,14 +243,18 @@ class ShardedEngine:
 
     name = "sharded"
 
-    def __init__(self, devices: Optional[list] = None):
+    def __init__(self, devices: Optional[list] = None,
+                 instrs_per_step: int = 1):
         self._devices = devices
+        self._ips = int(instrs_per_step)
 
     def run(self, state, max_ticks: int, chunk: int = 4096):
+        ips = _check_ips(chunk, self._ips)
         devs = tuple(self._devices if self._devices is not None
                      else jax.devices())
         if not _is_batched(state) or len(devs) < 2:
-            return JitEngine().run(state, max_ticks, chunk)
+            return JitEngine(instrs_per_step=ips).run(state, max_ticks,
+                                                      chunk)
         with _x64():
             b = int(state.counters.done.shape[0])
             d = min(len(devs), b)
@@ -233,9 +267,9 @@ class ShardedEngine:
                     state.counters, done=done))
             sharded = jax.tree.map(
                 lambda x: x.reshape((d, bp // d) + x.shape[1:]), state)
-            out = _pmap_fn(int(chunk), devs[:d])(
+            out = _pmap_fn(int(chunk), devs[:d], ips)(
                 sharded, jnp.asarray(_n_chunks(max_ticks, chunk),
-                                     jnp.int32), int(chunk))
+                                     jnp.int32), int(chunk), ips)
             out = jax.tree.map(
                 lambda x: x.reshape((bp,) + x.shape[2:])[:b], out)
             return jax.block_until_ready(out)

@@ -1,4 +1,4 @@
-"""RV64IM + Zicsr + H-extension decode/execute, branchless JAX.
+"""RV64IM + Zicsr + H-extension execute, branchless JAX (DESIGN.md §7).
 
 Covers: LUI/AUIPC/JAL/JALR/branches, loads/stores (B/H/W/D, aligned),
 OP/OP-IMM (+W forms), M extension (MUL/MULH*/DIV*/REM* + W forms),
@@ -7,8 +7,24 @@ HFENCE.VVMA/HFENCE.GVMA, and the hypervisor loads/stores
 HLV.{B,BU,H,HU,W,WU,D} / HLVX.{HU,WU} / HSV.{B,H,W,D} (paper §3.3's
 XlateFlags: forced-virtualization + HLVX execute-permission reads).
 
-``execute`` works on the machine-state dict and returns
-(new_state, Fault) — machine.step merges on fault.
+Execution is staged around the table-driven :mod:`repro.core.hext.decode`
+micro-op record: per-opclass contributors (ALU / control flow / memory /
+SYSTEM) each consume a :class:`decode.MicroOp` and merge into one
+:class:`ExecOut` delta record (``execute_uop``) — no full-state selects,
+no full-memory selects; ``machine`` applies the deltas with batch-level
+commit masks.  The two pieces the pipeline hoists out of the executor:
+
+* :func:`mem_query` — the memory-access *intent* (address, size, access
+  type, forced-virtualization flags) computed **before** translation, so
+  ``machine.step`` can probe the TLB and only build the two-stage walk
+  graph when some hart in the batch actually misses;
+* :func:`exec_sys` — the SYSTEM contributor (CSR file ops, xRET, WFI,
+  fences) as a separable :class:`SysOut`, so machine can gate the heavy
+  CSR where-chains behind a batch-level ``lax.cond``.
+
+``execute`` remains as the single-instruction compat wrapper (decode +
+always-walk translate + all contributors) with the legacy
+``(new_state, Fault, retired)`` contract.
 """
 from __future__ import annotations
 
@@ -18,27 +34,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hext import csr as C
+from repro.core.hext import decode as D
 from repro.core.hext import tlb as TLB
 from repro.core.hext import translate as X
+from repro.core.hext.bits import I64, U64, sext, word_deposit, word_extract
+from repro.core.hext.bits import i64 as _i
+from repro.core.hext.bits import u64 as _u
 
-U64 = jnp.uint64
-I64 = jnp.int64
 INT_MIN = -(1 << 63)
-
-
-def _u(x):
-    return jnp.asarray(x, U64)
-
-
-def _i(x):
-    return jnp.asarray(x, I64)
-
-
-def sext(x, bits):
-    """Sign-extend the low `bits` of uint64 x (upper bits ignored)."""
-    x = _u(x) & _u((1 << bits) - 1)
-    m = _u(1 << (bits - 1))
-    return ((x ^ m) - m)
 
 
 class Fault(NamedTuple):
@@ -145,18 +148,25 @@ def remu(a, b):
 # ---------------------------------------------------------------------------
 
 def translate_cached(state, va, acc, force_virt=False, hlvx=False):
-    """TLB-first translation; walk + insert on miss. Returns (pa, XResult,
+    """TLB-first translation; walk + insert on miss. Returns (XResult,
     walked).  Lookups carry the access's privilege context so a hit can
-    never reuse permissions composed under a different priv/SUM/MXR."""
+    never reuse permissions composed under a different priv/SUM/MXR.
+
+    This is the always-walk compat path (scalar callers, tests).  The
+    pipelined ``machine.step`` uses the same TLB verdict but only builds
+    the walk graph under a batch-level ``lax.cond`` when some hart needs
+    it — on a usable hit the walk-only XResult fields are zero there,
+    which is bit-equivalent because every consumer of those fields is
+    gated on ``walked``/``xr.fault`` (DESIGN.md §7)."""
     virt_eff = state["virt"] | jnp.asarray(force_virt, bool)
     sum_bit, mxr = X.eff_ctx(state["csrs"], virt_eff)
-    hit, pa_tlb, perm_ok = TLB.lookup(state["tlb"], va, virt_eff, _u(acc),
-                                      state["priv"], sum_bit, mxr)
-    use_tlb = hit & perm_ok & ~jnp.asarray(hlvx, bool)
+    tv = TLB.lookup(state["tlb"], va, virt_eff, _u(acc),
+                    state["priv"], sum_bit, mxr)
+    use_tlb = tv.use & ~jnp.asarray(hlvx, bool)
     xr = X.translate(state["mem"], state["csrs"], state["priv"],
                      state["virt"], va, acc, force_virt=force_virt,
                      hlvx=hlvx)
-    pa = jnp.where(use_tlb, pa_tlb, xr.pa)
+    pa = jnp.where(use_tlb, tv.pa, xr.pa)
     fault = ~use_tlb & xr.fault
     xr = xr._replace(pa=pa, fault=fault)
     return xr, ~use_tlb
@@ -177,27 +187,6 @@ def tlb_fill(state, va, xr, force_virt=False):
     tlb_sel = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_tlb,
                            state["tlb"])
     return tlb_sel
-
-
-def word_extract(word, pa, size_log2, unsigned):
-    """Read 1/2/4/8 bytes out of an aligned 64-bit word (shared by RAM and
-    the CLINT MMIO registers)."""
-    off = (_u(pa) & _u(7)) << _u(3)           # bit offset
-    v = word >> off
-    nbits = _u(8) << _u(size_log2)
-    mask = jnp.where(nbits >= _u(64), ~_u(0), (_u(1) << nbits) - _u(1))
-    v = v & mask
-    shift = _u(64) - nbits                    # dynamic sign extension
-    sv = _u(_i(v << shift) >> shift.astype(I64))
-    return jnp.where(unsigned, v, sv)
-
-
-def word_deposit(word, pa, val, size_log2):
-    """Merge a 1/2/4/8-byte store into an aligned 64-bit word."""
-    off = (_u(pa) & _u(7)) << _u(3)
-    nbits = _u(8) << _u(size_log2)
-    mask = jnp.where(nbits >= 64, ~_u(0), (_u(1) << nbits) - _u(1))
-    return (word & ~(mask << off)) | ((_u(val) & mask) << off)
 
 
 def mem_read(mem, pa, size_log2, unsigned):
@@ -221,60 +210,275 @@ MMIO_MTIME = 0x1000BFF8
 
 
 # ---------------------------------------------------------------------------
-# the executor
+# stage 1: memory-access intent (pre-translation)
 # ---------------------------------------------------------------------------
 
-def execute(state, instr):
-    """One instruction. Returns (new_state, Fault, retired: bool)."""
-    s = state
-    csrs = s["csrs"]
-    regs = s["regs"]
-    priv = s["priv"]
-    virt = s["virt"]
-    pc = s["pc"]
+class MemQuery(NamedTuple):
+    """The memory-access intent of one micro-op, computed *before*
+    translation so the pipeline can probe the TLB (and decide whether the
+    walk graph is needed at all) ahead of the executor."""
 
-    op = instr & _u(0x7F)
-    rd = ((instr >> _u(7)) & _u(31)).astype(jnp.int32)
-    f3 = (instr >> _u(12)) & _u(7)
-    rs1 = ((instr >> _u(15)) & _u(31)).astype(jnp.int32)
-    rs2i = ((instr >> _u(20)) & _u(31)).astype(jnp.int32)
-    f7 = (instr >> _u(25)) & _u(0x7F)
-    rv1 = regs[rs1]
-    rv2 = regs[rs2i]
+    any_load: jnp.ndarray
+    any_store: jnp.ndarray
+    mem_op: jnp.ndarray      # legal explicit access (excl. hlv/hsv traps)
+    is_hx: jnp.ndarray       # hlv/hsv/hlvx family
+    hx_vinst: jnp.ndarray
+    hx_illegal: jnp.ndarray
+    addr: jnp.ndarray        # uint64 VA
+    size: jnp.ndarray        # int32 log2 bytes
+    uns: jnp.ndarray         # bool: zero-extend load
+    hlvx: jnp.ndarray        # bool: execute-permission read
+    force_virt: jnp.ndarray  # bool: access as if V=1
+    macc: jnp.ndarray        # uint64 ACC_R / ACC_W
+    misaligned: jnp.ndarray
 
-    imm_i = sext(instr >> _u(20), 12)
-    imm_s = sext(((instr >> _u(20)) & ~_u(0x1F)) | ((instr >> _u(7)) & _u(0x1F)), 12)
-    imm_b = sext((((instr >> _u(31)) & _u(1)) << _u(12)) |
-                 (((instr >> _u(7)) & _u(1)) << _u(11)) |
-                 (((instr >> _u(25)) & _u(0x3F)) << _u(5)) |
-                 (((instr >> _u(8)) & _u(0xF)) << _u(1)), 13)
-    imm_u = sext(instr & _u(0xFFFFF000), 32)
-    imm_j = sext((((instr >> _u(31)) & _u(1)) << _u(20)) |
-                 (((instr >> _u(12)) & _u(0xFF)) << _u(12)) |
-                 (((instr >> _u(20)) & _u(1)) << _u(11)) |
-                 (((instr >> _u(21)) & _u(0x3FF)) << _u(1)), 21)
 
-    pc4 = pc + _u(4)
-    new_pc = pc4
-    wb = _u(0)           # writeback value
-    do_wb = jnp.zeros((), bool)
+def mem_query(csrs, priv, virt, uop: D.MicroOp, rv1) -> MemQuery:
+    is_load = uop.cls == D.CLS_LOAD
+    is_store = uop.cls == D.CLS_STORE
+    is_hx = (uop.cls == D.CLS_SYSTEM) & (uop.f3 == _u(4))
+    is_hlv = is_hx & ((uop.f7 & _u(1)) == 0)
+    is_hsv = is_hx & ((uop.f7 & _u(1)) == 1)
+    # hlv/hsv legality: M or HS (or U with hstatus.HU); VS/VU → virtual inst
+    hu = (csrs[C.R_HSTATUS] & _u(C.HSTATUS_HU)) != 0
+    hx_legal = (priv == 3) | ((priv == 1) & ~virt) | \
+        ((priv == 0) & ~virt & hu)
+    hx_vinst = is_hx & virt
+    hx_illegal = is_hx & ~virt & ~hx_legal
+
+    any_load = is_load | is_hlv
+    any_store = is_store | is_hsv
+    # decode put the I-format imm on loads and the S-format imm on stores;
+    # hlv/hsv address directly from rs1
+    addr = jnp.where(is_hx, rv1, rv1 + uop.imm)
+    size = jnp.where(is_hx, ((uop.f7 >> _u(1)) & _u(3)).astype(jnp.int32),
+                     (uop.f3 & _u(3)).astype(jnp.int32))
+    uns = jnp.where(is_hx, (uop.rs2 & 1) == 1, (uop.f3 & _u(4)) != 0)
+    hlvx = is_hlv & (uop.rs2 == 3)
+
+    sz_b = _u(1) << _u(size)
+    misaligned = (addr & (sz_b - _u(1))) != 0
+    macc = _u(jnp.where(any_store, X.ACC_W, X.ACC_R))
+    mem_op = (any_load | any_store) & ~hx_vinst & ~hx_illegal
+    return MemQuery(any_load=any_load, any_store=any_store, mem_op=mem_op,
+                    is_hx=is_hx, hx_vinst=hx_vinst, hx_illegal=hx_illegal,
+                    addr=addr, size=size, uns=uns, hlvx=hlvx,
+                    force_virt=is_hx, macc=macc, misaligned=misaligned)
+
+
+# ---------------------------------------------------------------------------
+# SYSTEM contributor (CSR ops, xRET, WFI, fences) — separable so machine
+# can gate it behind a batch-level cond (CSR read/write are the two
+# heaviest where-chains in the executor)
+# ---------------------------------------------------------------------------
+
+class SysOut(NamedTuple):
+    """Effects of the SYSTEM (non-hlv/hsv) contributor, pre-gated: for a
+    non-SYSTEM micro-op every ``*_set``/flag field is False, so the
+    all-False record IS the neutral element (``machine`` substitutes it
+    when no hart in the batch runs a SYSTEM op)."""
+
+    fault: Fault
+    wb: jnp.ndarray          # CSR read value
+    do_wb: jnp.ndarray
+    csrs: jnp.ndarray        # full post-op CSR bank (valid when csrs_set)
+    csrs_set: jnp.ndarray
+    pc: jnp.ndarray          # xRET target (valid when pc_set)
+    pc_set: jnp.ndarray
+    priv: jnp.ndarray        # xRET privilege (valid when pv_set)
+    virt: jnp.ndarray
+    pv_set: jnp.ndarray
+    halt: jnp.ndarray        # WFI with nothing pending
+    flush_guest: jnp.ndarray   # TLB invalidation scopes
+    flush_native: jnp.ndarray
+
+
+def exec_sys(csrs, priv, virt, pc, rv1, uop: D.MicroOp) -> SysOut:
+    """CSR instructions + privileged ops + fences → :class:`SysOut`."""
+    instr = uop.instr
+    f3 = uop.f3
+    is_sys = uop.cls == D.CLS_SYSTEM
     fault = no_fault()
-    new_mem = s["mem"]
-    new_csrs = csrs
-    new_tlb = s["tlb"]
-    new_priv = priv
-    new_virt = virt
-    new_halt = jnp.zeros((), bool)
-    console = s["console"]
-    done = s["done"]
-    exit_code = s["exit_code"]
 
-    # ---------------- ALU ---------------------------------------------------
-    is_op = op == _u(0x33)
-    is_opi = op == _u(0x13)
-    is_op32 = op == _u(0x3B)
-    is_opi32 = op == _u(0x1B)
-    alu_b = jnp.where(is_op | is_op32, rv2, imm_i)
+    # ---------------- CSR ops ----------------------------------------------
+    is_csr = is_sys & (f3 != _u(0)) & (f3 != _u(4))
+    csr_addr = (instr >> _u(20)).astype(jnp.int32) & 0xFFF
+    imm_z = _u(uop.rs1)
+    csr_wdata = jnp.where(f3 >= _u(5), imm_z, rv1)
+    old, r_ok, r_vinst = C.csr_read(csrs, csr_addr, priv, virt)
+    wval = jnp.where((f3 & _u(3)) == 1, csr_wdata,
+           jnp.where((f3 & _u(3)) == 2, old | csr_wdata, old & ~csr_wdata))
+    csr_do_write = ((f3 & _u(3)) == 1) | (uop.rs1 != 0)
+    csrs_w, w_ok, w_vinst = C.csr_write(csrs, csr_addr, wval, priv, virt)
+    csr_ok = r_ok & jnp.where(csr_do_write, w_ok, True)
+    csr_vinst = r_vinst | (csr_do_write & w_vinst)
+    wb = old
+    do_wb = is_csr & csr_ok
+    fault = merge_fault(fault, mk_fault(is_csr & csr_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+    fault = merge_fault(fault, mk_fault(is_csr & ~csr_ok & ~csr_vinst,
+                                        C.EXC_ILLEGAL, instr))
+    # satp/vsatp/hgatp writes invalidate cached translations
+    atp_write = is_csr & csr_ok & csr_do_write & (
+        (csr_addr == 0x180) | (csr_addr == 0x280) | (csr_addr == 0x680))
+
+    # ---------------- priv ops ----------------------------------------------
+    f7s = uop.f7
+    sys0 = is_sys & (f3 == _u(0))
+    is_ecall = sys0 & (instr == _u(0x00000073))
+    is_ebreak = sys0 & (instr == _u(0x00100073))
+    is_sret = sys0 & (instr == _u(0x10200073))
+    is_mret = sys0 & (instr == _u(0x30200073))
+    is_wfi = sys0 & (instr == _u(0x10500073))
+    is_sfence = sys0 & (f7s == _u(0x09))
+    is_hfence_v = sys0 & (f7s == _u(0x11))   # hfence.vvma
+    is_hfence_g = sys0 & (f7s == _u(0x31))   # hfence.gvma
+
+    mstatus = csrs[C.R_MSTATUS]
+    hstatus = csrs[C.R_HSTATUS]
+
+    ecall_cause = jnp.where(priv == 3, C.EXC_ECALL_M,
+                  jnp.where(priv == 0, C.EXC_ECALL_U,
+                            jnp.where(virt, C.EXC_ECALL_VS, C.EXC_ECALL_S)))
+    fault = merge_fault(fault, mk_fault(is_ecall, ecall_cause))
+    fault = merge_fault(fault, mk_fault(is_ebreak, C.EXC_BREAK, pc))
+
+    # WFI: TW/VTW trapping (paper wfi_exception_tests)
+    tw = (mstatus & _u(C.MSTATUS_TW)) != 0
+    vtw = (hstatus & _u(C.HSTATUS_VTW)) != 0
+    wfi_illegal = is_wfi & ((tw & (priv < 3)) | (priv == 0) & ~virt)
+    wfi_vinst = is_wfi & ~wfi_illegal & virt & (vtw | (priv == 0))
+    wfi_ok = is_wfi & ~wfi_illegal & ~wfi_vinst
+    pend_any = (csrs[C.R_MIP] & csrs[C.R_MIE]) != 0
+    halt = wfi_ok & ~pend_any
+    fault = merge_fault(fault, mk_fault(wfi_illegal, C.EXC_ILLEGAL, instr))
+    fault = merge_fault(fault, mk_fault(wfi_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+
+    # SRET
+    tsr = (mstatus & _u(C.MSTATUS_TSR)) != 0
+    vtsr = (hstatus & _u(C.HSTATUS_VTSR)) != 0
+    sret_illegal = is_sret & ((priv == 0) | (tsr & (priv == 1) & ~virt))
+    sret_vinst = is_sret & ~sret_illegal & virt & (vtsr | (priv == 0))
+    sret_ok = is_sret & ~sret_illegal & ~sret_vinst
+    fault = merge_fault(fault, mk_fault(sret_illegal, C.EXC_ILLEGAL, instr))
+    fault = merge_fault(fault, mk_fault(sret_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+    # sret from HS: V ← hstatus.SPV, priv ← sstatus.SPP
+    spp = ((mstatus & _u(C.MSTATUS_SPP)) != 0).astype(jnp.int32)
+    spie = (mstatus & _u(C.MSTATUS_SPIE)) != 0
+    mst_sret = mstatus
+    mst_sret = jnp.where(spie, mst_sret | _u(C.MSTATUS_SIE),
+                         mst_sret & ~_u(C.MSTATUS_SIE))
+    mst_sret = (mst_sret | _u(C.MSTATUS_SPIE)) & ~_u(C.MSTATUS_SPP)
+    spv = (hstatus & _u(C.HSTATUS_SPV)) != 0
+    hst_sret = hstatus & ~_u(C.HSTATUS_SPV)
+    # sret from VS (virt): uses vsstatus
+    vsstatus = csrs[C.R_VSSTATUS]
+    vspp = ((vsstatus & _u(C.MSTATUS_SPP)) != 0).astype(jnp.int32)
+    vspie = (vsstatus & _u(C.MSTATUS_SPIE)) != 0
+    vst_sret = vsstatus
+    vst_sret = jnp.where(vspie, vst_sret | _u(C.MSTATUS_SIE),
+                         vst_sret & ~_u(C.MSTATUS_SIE))
+    vst_sret = (vst_sret | _u(C.MSTATUS_SPIE)) & ~_u(C.MSTATUS_SPP)
+    csrs_sret_hs = csrs.at[C.R_MSTATUS].set(mst_sret).at[C.R_HSTATUS].set(
+        hst_sret)
+    csrs_sret_vs = csrs.at[C.R_VSSTATUS].set(vst_sret)
+
+    # MRET
+    mret_illegal = is_mret & (priv != 3)
+    mret_ok = is_mret & ~mret_illegal
+    fault = merge_fault(fault, mk_fault(mret_illegal, C.EXC_ILLEGAL, instr))
+    mpp = ((mstatus & _u(C.MSTATUS_MPP)) >> _u(11)).astype(jnp.int32)
+    mpie = (mstatus & _u(C.MSTATUS_MPIE)) != 0
+    mpv = (mstatus & _u(C.MSTATUS_MPV)) != 0
+    mst_mret = mstatus
+    mst_mret = jnp.where(mpie, mst_mret | _u(C.MSTATUS_MIE),
+                         mst_mret & ~_u(C.MSTATUS_MIE))
+    mst_mret = (mst_mret | _u(C.MSTATUS_MPIE)) & ~_u(C.MSTATUS_MPP) & \
+        ~_u(C.MSTATUS_MPV)
+
+    # fences (paper hfence_tests: hfence touches only guest TLB entries).
+    # sfence.vma from VS flushes the guest's own (guest-tagged) entries;
+    # hfence.{vvma,gvma} from VS raises virtual-instruction; from U illegal.
+    is_hf = is_hfence_v | is_hfence_g
+    hf_vinst = is_hf & virt
+    hf_illegal = is_hf & ~virt & (priv == 0)
+    sf_vinst = is_sfence & virt & (priv == 0)          # VU
+    sf_illegal = is_sfence & ~virt & (priv == 0)       # native U
+    fault = merge_fault(fault, mk_fault(hf_vinst | sf_vinst,
+                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
+    fault = merge_fault(fault, mk_fault(hf_illegal | sf_illegal,
+                                        C.EXC_ILLEGAL, instr))
+    do_hf = is_hf & ~virt & (priv >= 1)
+    do_sf_native = is_sfence & ~virt & (priv >= 1)
+    do_sf_guest = is_sfence & virt & (priv >= 1)       # guest flushing itself
+
+    # ---------------- merge --------------------------------------------------
+    new_csrs = csrs
+    new_csrs = jnp.where(is_csr & csr_ok & csr_do_write, csrs_w, new_csrs)
+    new_csrs = jnp.where(sret_ok & ~virt, csrs_sret_hs,
+                         jnp.where(sret_ok & virt, csrs_sret_vs, new_csrs))
+    new_csrs = jnp.where(mret_ok, csrs.at[C.R_MSTATUS].set(mst_mret),
+                         new_csrs)
+    csrs_set = (is_csr & csr_ok & csr_do_write) | sret_ok | mret_ok
+
+    new_pc = jnp.where(sret_ok, jnp.where(virt, csrs[C.R_VSEPC],
+                                          csrs[C.R_SEPC]), csrs[C.R_MEPC])
+    new_priv = jnp.where(sret_ok, jnp.where(virt, vspp, spp), mpp)
+    new_virt = jnp.where(sret_ok, jnp.where(virt, virt, spv),
+                         (mpp != 3) & mpv)
+    pv_set = sret_ok | mret_ok
+
+    return SysOut(fault=fault, wb=wb, do_wb=do_wb,
+                  csrs=new_csrs, csrs_set=csrs_set,
+                  pc=new_pc, pc_set=pv_set,
+                  priv=new_priv, virt=new_virt, pv_set=pv_set,
+                  halt=halt,
+                  flush_guest=atp_write | do_hf | do_sf_guest,
+                  flush_native=atp_write | do_sf_native)
+
+
+# ---------------------------------------------------------------------------
+# the executor: opclass contributors → one ExecOut delta record
+# ---------------------------------------------------------------------------
+
+class ExecOut(NamedTuple):
+    """Per-instruction effect deltas.  ``machine``'s retire stage applies
+    these under the batch commit masks instead of selecting between whole
+    pre-built states — in particular the store is a single conditional
+    scatter (``mem_idx``/``mem_word``/``mem_commit``), never a
+    full-memory select."""
+
+    fault: Fault
+    retired: jnp.ndarray
+    new_pc: jnp.ndarray
+    rd: jnp.ndarray
+    wb: jnp.ndarray
+    do_wb: jnp.ndarray
+    csrs: jnp.ndarray        # full post-exec CSR bank
+    tlb: dict                # full post-exec TLB (data fill + flushes)
+    priv: jnp.ndarray
+    virt: jnp.ndarray
+    halt: jnp.ndarray
+    mem_idx: jnp.ndarray     # store target word index
+    mem_word: jnp.ndarray    # merged word to write
+    mem_commit: jnp.ndarray
+    console_inc: jnp.ndarray
+    done_set: jnp.ndarray
+    exit_code: jnp.ndarray
+    ctxsw_inc: jnp.ndarray
+
+
+def _alu_result(uop: D.MicroOp, rv1, rv2):
+    """OP / OP-IMM (+W forms, M extension) → (result, hit)."""
+    f3, f7 = uop.f3, uop.f7
+    is_alu = uop.cls == D.CLS_ALU
+    is_alu32 = uop.cls == D.CLS_ALU32
+    is_op = is_alu & ~uop.alu_imm
+    is_opi = is_alu & uop.alu_imm
+    is_op32 = is_alu32 & ~uop.alu_imm
+    alu_b = jnp.where(uop.alu_imm, uop.imm, rv2)
     m_ext = (is_op | is_op32) & (f7 == _u(1))
 
     sh6 = alu_b & _u(0x3F)
@@ -289,7 +493,7 @@ def execute(state, instr):
     xorv = rv1 ^ alu_b
     orv = rv1 | alu_b
     andv = rv1 & alu_b
-    arith_sub = (is_op & (f7 == _u(0x20)))
+    arith_sub = is_op & (f7 == _u(0x20))
     # OP-IMM-64 srai carries shamt[5] in instr bit 25, so its funct7 is
     # 0x20 OR 0x21 — decode the arithmetic bit from funct6 there (an exact
     # 0x20 match silently turned `srai rd, rs, 32..63` into srli)
@@ -341,25 +545,48 @@ def execute(state, instr):
           jnp.where(f3 == 5, divu32,
           jnp.where(f3 == 6, rem32, remu32))))
     r32 = jnp.where(m_ext & is_op32, m32, r32)
+    res = jnp.where(is_alu, r64, r32)
+    return res, is_alu | is_alu32
 
-    alu_hit = is_op | is_opi | is_op32 | is_opi32
-    wb = jnp.where(is_op | is_opi, r64, jnp.where(is_op32 | is_opi32, r32,
-                                                  wb))
-    do_wb = do_wb | alu_hit
+
+def execute_uop(state, uop: D.MicroOp, rv1, rv2, q: MemQuery,
+                xr: X.XResult, walked, sys: SysOut) -> ExecOut:
+    """Merge all opclass contributors for one decoded micro-op.
+
+    ``xr``/``walked`` is the (possibly TLB-short-circuited) data
+    translation for ``q.addr``; ``sys`` the (possibly batch-gated) SYSTEM
+    contribution.  Pure per-hart function — vmap over the batch."""
+    s = state
+    csrs = s["csrs"]
+    pc = s["pc"]
+    priv = s["priv"]
+    virt = s["virt"]
+    cls = uop.cls
+    instr = uop.instr
+
+    pc4 = pc + _u(4)
+    new_pc = pc4
+    fault = no_fault()
+
+    # ---------------- ALU ---------------------------------------------------
+    alu_res, alu_hit = _alu_result(uop, rv1, rv2)
+    wb = jnp.where(alu_hit, alu_res, _u(0))
+    do_wb = alu_hit
 
     # ---------------- LUI / AUIPC / JAL / JALR / branches -------------------
-    is_lui = op == _u(0x37)
-    is_auipc = op == _u(0x17)
-    is_jal = op == _u(0x6F)
-    is_jalr = op == _u(0x67)
-    wb = jnp.where(is_lui, imm_u, wb)
-    wb = jnp.where(is_auipc, pc + imm_u, wb)
+    is_lui = cls == D.CLS_LUI
+    is_auipc = cls == D.CLS_AUIPC
+    is_jal = cls == D.CLS_JAL
+    is_jalr = cls == D.CLS_JALR
+    wb = jnp.where(is_lui, uop.imm, wb)
+    wb = jnp.where(is_auipc, pc + uop.imm, wb)
     wb = jnp.where(is_jal | is_jalr, pc4, wb)
     do_wb = do_wb | is_lui | is_auipc | is_jal | is_jalr
-    new_pc = jnp.where(is_jal, pc + imm_j, new_pc)
-    new_pc = jnp.where(is_jalr, (rv1 + imm_i) & ~_u(1), new_pc)
+    new_pc = jnp.where(is_jal, pc + uop.imm, new_pc)
+    new_pc = jnp.where(is_jalr, (rv1 + uop.imm) & ~_u(1), new_pc)
 
-    is_br = op == _u(0x63)
+    is_br = cls == D.CLS_BRANCH
+    f3 = uop.f3
     beq = rv1 == rv2
     blt = _i(rv1) < _i(rv2)
     bltu = rv1 < rv2
@@ -368,36 +595,12 @@ def execute(state, instr):
           jnp.where(f3 == 4, blt,
           jnp.where(f3 == 5, ~blt,
           jnp.where(f3 == 6, bltu, ~bltu)))))
-    new_pc = jnp.where(is_br & brt, pc + imm_b, new_pc)
+    new_pc = jnp.where(is_br & brt, pc + uop.imm, new_pc)
 
     # ---------------- loads / stores (incl. hlv/hsv) -------------------------
-    is_load = op == _u(0x03)
-    is_store = op == _u(0x23)
-    is_sys = op == _u(0x73)
-    is_hx = is_sys & (f3 == _u(4))
-    is_hlv = is_hx & ((f7 & _u(1)) == 0)
-    is_hsv = is_hx & ((f7 & _u(1)) == 1)
-    # hlv/hsv legality: M or HS (or U with hstatus.HU); VS/VU → virtual inst
-    hu = (csrs[C.R_HSTATUS] & _u(C.HSTATUS_HU)) != 0
-    hx_legal = (priv == 3) | ((priv == 1) & ~virt) | ((priv == 0) & ~virt & hu)
-    hx_vinst = is_hx & virt
-    hx_illegal = is_hx & ~virt & ~hx_legal
-
-    any_load = is_load | is_hlv
-    any_store = is_store | is_hsv
-    addr = jnp.where(is_hx, rv1, rv1 + jnp.where(is_store, imm_s, imm_i))
-    size = jnp.where(is_hx, ((f7 >> _u(1)) & _u(3)).astype(jnp.int32),
-                     (f3 & _u(3)).astype(jnp.int32))
-    uns = jnp.where(is_hx, (rs2i & 1) == 1, (f3 & _u(4)) != 0)
-    hlvx = is_hlv & (rs2i == 3)
-    force_virt = is_hx
-
-    # alignment
-    sz_b = _u(1) << _u(size)
-    misaligned = (addr & (sz_b - _u(1))) != 0
-    macc = jnp.where(any_store, X.ACC_W, X.ACC_R)
-    xr, walked = translate_cached(
-        {**s, "csrs": csrs}, addr, macc, force_virt=force_virt, hlvx=hlvx)
+    addr, size, uns = q.addr, q.size, q.uns
+    any_load, any_store = q.any_load, q.any_store
+    mem_op = q.mem_op
     # MMIO check (physical).  Every device register decodes as a whole
     # 8-byte region (the CLINT ones with size-aware access), so the classic
     # RV32-style pair of 32-bit stores works and a sub-word access can
@@ -420,7 +623,9 @@ def execute(state, instr):
     pa_oob = (~is_mmio & (xr.pa >= _u(s["mem"].shape[0] * 8))) | \
         (any_load & is_mmio & ~mmio_readable)
 
-    ld_val = mem_read(s["mem"], xr.pa, size, uns)
+    mem_idx = (xr.pa >> _u(3)).astype(jnp.int32) % s["mem"].shape[0]
+    word0 = s["mem"][mem_idx]
+    ld_val = word_extract(word0, xr.pa, size, uns)
     # CLINT reads: mtime / mtimecmp come from the timer registers
     ld_val = jnp.where(is_mtime_io,
                        word_extract(csrs[C.R_MTIME], xr.pa, size, uns),
@@ -428,12 +633,11 @@ def execute(state, instr):
     ld_val = jnp.where(is_mtimecmp_io,
                        word_extract(csrs[C.R_MTIMECMP], xr.pa, size, uns),
                        ld_val)
-    st_mem = mem_write(s["mem"], xr.pa, rv2, size)
+    st_word = word_deposit(word0, xr.pa, rv2, size)
 
-    mem_op = (any_load | any_store) & ~hx_vinst & ~hx_illegal
-    mem_fault_align = mem_op & misaligned
-    mem_fault_page = mem_op & ~misaligned & xr.fault
-    mem_fault_oob = mem_op & ~misaligned & ~xr.fault & pa_oob
+    mem_fault_align = mem_op & q.misaligned
+    mem_fault_page = mem_op & ~q.misaligned & xr.fault
+    mem_fault_oob = mem_op & ~q.misaligned & ~xr.fault & pa_oob
 
     # tinst for guest page faults (paper tinst_tests): pseudoinstruction for
     # implicit PTE-walk faults, rs1-cleared transform for explicit accesses
@@ -444,30 +648,28 @@ def execute(state, instr):
     tinst = jnp.where(xr.implicit, pseudo, transform)
     tinst = jnp.where(is_gpf, tinst, _u(0))
 
-    f_mem = mk_fault(
-        mem_fault_page, 0, 0, 0, False, 0)._replace(
-        cause=xr.cause, tval=xr.tval, tval2=xr.tval2,
-        gva=xr.gva | (force_virt & xr.fault), tinst=tinst)
+    f_mem = Fault(mem_fault_page, xr.cause, xr.tval, xr.tval2,
+                  xr.gva | (q.force_virt & xr.fault), tinst)
     align_cause = jnp.where(any_store, C.EXC_SADDR_MISALIGNED,
                             C.EXC_LADDR_MISALIGNED)
     f_align = Fault(mem_fault_align, _u(align_cause), _u(addr), _u(0),
-                    jnp.asarray(virt | force_virt, bool), _u(0))
+                    jnp.asarray(virt | q.force_virt, bool), _u(0))
     oob_cause = jnp.where(any_store, C.EXC_SACCESS, C.EXC_LACCESS)
     f_oob = Fault(mem_fault_oob, _u(oob_cause), _u(addr), _u(0),
-                  jnp.asarray(virt | force_virt, bool), _u(0))
+                  jnp.asarray(virt | q.force_virt, bool), _u(0))
     fault = merge_fault(merge_fault(merge_fault(f_align, f_mem), f_oob),
                         fault)
 
-    mem_ok = mem_op & ~misaligned & ~xr.fault & ~pa_oob
+    mem_ok = mem_op & ~q.misaligned & ~xr.fault & ~pa_oob
     wb = jnp.where(any_load & mem_ok, ld_val, wb)
     do_wb = do_wb | (any_load & mem_ok)
-    new_mem = jnp.where(any_store & mem_ok & ~is_mmio, st_mem, new_mem)
-    console = jnp.where(any_store & mem_ok & is_console, console + 1,
-                        console)
-    done = done | (any_store & mem_ok & is_done_io)
-    exit_code = jnp.where(any_store & mem_ok & is_done_io, rv2, exit_code)
+    mem_commit = any_store & mem_ok & ~is_mmio
+    console_inc = any_store & mem_ok & is_console
+    done_set = any_store & mem_ok & is_done_io
+    ctxsw_inc = any_store & mem_ok & is_ctxsw_io
     # CLINT writes: size-aware merges into the timer registers (mtimecmp
     # arms the M-level comparator; mtime is writable per the CLINT spec)
+    new_csrs = csrs
     new_csrs = jnp.where(
         any_store & mem_ok & is_mtimecmp_io,
         csrs.at[C.R_MTIMECMP].set(
@@ -476,176 +678,71 @@ def execute(state, instr):
         any_store & mem_ok & is_mtime_io,
         csrs.at[C.R_MTIME].set(
             word_deposit(csrs[C.R_MTIME], xr.pa, rv2, size)), new_csrs)
-    ctxsw_poke = any_store & mem_ok & is_ctxsw_io
     new_tlb = jax.tree.map(
         lambda n, o: jnp.where(mem_ok & walked, n, o),
-        tlb_fill(s, addr, xr, force_virt=force_virt), new_tlb)
-    fault = merge_fault(fault, mk_fault(hx_vinst, C.EXC_VIRTUAL_INSTRUCTION,
-                                        instr))
-    fault = merge_fault(fault, mk_fault(hx_illegal, C.EXC_ILLEGAL, instr))
-
-    # ---------------- SYSTEM: CSR ops ---------------------------------------
-    is_csr = is_sys & (f3 != _u(0)) & (f3 != _u(4))
-    csr_addr = (instr >> _u(20)).astype(jnp.int32) & 0xFFF
-    imm_z = _u(rs1)
-    csr_wdata = jnp.where(f3 >= _u(5), imm_z, rv1)
-    old, r_ok, r_vinst = C.csr_read(csrs, csr_addr, priv, virt)
-    wval = jnp.where((f3 & _u(3)) == 1, csr_wdata,
-           jnp.where((f3 & _u(3)) == 2, old | csr_wdata, old & ~csr_wdata))
-    csr_do_write = ((f3 & _u(3)) == 1) | (rs1 != 0)
-    csrs_w, w_ok, w_vinst = C.csr_write(csrs, csr_addr, wval, priv, virt)
-    csr_ok = r_ok & jnp.where(csr_do_write, w_ok, True)
-    csr_vinst = r_vinst | (csr_do_write & w_vinst)
-    new_csrs = jnp.where(is_csr & csr_ok & csr_do_write, csrs_w, new_csrs)
-    wb = jnp.where(is_csr & csr_ok, old, wb)
-    do_wb = do_wb | (is_csr & csr_ok)
-    fault = merge_fault(fault, mk_fault(is_csr & csr_vinst,
+        tlb_fill(s, addr, xr, force_virt=q.force_virt), s["tlb"])
+    fault = merge_fault(fault, mk_fault(q.hx_vinst,
                                         C.EXC_VIRTUAL_INSTRUCTION, instr))
-    fault = merge_fault(fault, mk_fault(is_csr & ~csr_ok & ~csr_vinst,
-                                        C.EXC_ILLEGAL, instr))
-    # satp/vsatp/hgatp writes invalidate cached translations
-    atp_write = is_csr & csr_ok & csr_do_write & (
-        (csr_addr == 0x180) | (csr_addr == 0x280) | (csr_addr == 0x680))
-    new_tlb = jax.tree.map(
-        lambda n, o: jnp.where(atp_write, n, o),
-        TLB.flush_where(s["tlb"], jnp.ones((), bool), jnp.ones((), bool)),
-        new_tlb)
+    fault = merge_fault(fault, mk_fault(q.hx_illegal, C.EXC_ILLEGAL, instr))
 
-    # ---------------- SYSTEM: priv ops --------------------------------------
-    f7s = f7
-    sys0 = is_sys & (f3 == _u(0))
-    is_ecall = sys0 & (instr == _u(0x00000073))
-    is_ebreak = sys0 & (instr == _u(0x00100073))
-    is_sret = sys0 & (instr == _u(0x10200073))
-    is_mret = sys0 & (instr == _u(0x30200073))
-    is_wfi = sys0 & (instr == _u(0x10500073))
-    is_sfence = sys0 & (f7s == _u(0x09))
-    is_hfence_v = sys0 & (f7s == _u(0x11))   # hfence.vvma
-    is_hfence_g = sys0 & (f7s == _u(0x31))   # hfence.gvma
-
-    mstatus = csrs[C.R_MSTATUS]
-    hstatus = csrs[C.R_HSTATUS]
-
-    ecall_cause = jnp.where(priv == 3, C.EXC_ECALL_M,
-                  jnp.where(priv == 0, C.EXC_ECALL_U,
-                            jnp.where(virt, C.EXC_ECALL_VS, C.EXC_ECALL_S)))
-    fault = merge_fault(fault, mk_fault(is_ecall, ecall_cause))
-    fault = merge_fault(fault, mk_fault(is_ebreak, C.EXC_BREAK, pc))
-
-    # WFI: TW/VTW trapping (paper wfi_exception_tests)
-    tw = (mstatus & _u(C.MSTATUS_TW)) != 0
-    vtw = (hstatus & _u(C.HSTATUS_VTW)) != 0
-    wfi_illegal = is_wfi & ((tw & (priv < 3)) | (priv == 0) & ~virt)
-    wfi_vinst = is_wfi & ~wfi_illegal & virt & (vtw | (priv == 0))
-    wfi_ok = is_wfi & ~wfi_illegal & ~wfi_vinst
-    pend_any = (csrs[C.R_MIP] & csrs[C.R_MIE]) != 0
-    new_halt = new_halt | (wfi_ok & ~pend_any)
-    fault = merge_fault(fault, mk_fault(wfi_illegal, C.EXC_ILLEGAL, instr))
-    fault = merge_fault(fault, mk_fault(wfi_vinst,
-                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
-
-    # SRET
-    tsr = (mstatus & _u(C.MSTATUS_TSR)) != 0
-    vtsr = (hstatus & _u(C.HSTATUS_VTSR)) != 0
-    sret_illegal = is_sret & ((priv == 0) | (tsr & (priv == 1) & ~virt))
-    sret_vinst = is_sret & ~sret_illegal & virt & (vtsr | (priv == 0))
-    sret_ok = is_sret & ~sret_illegal & ~sret_vinst
-    fault = merge_fault(fault, mk_fault(sret_illegal, C.EXC_ILLEGAL, instr))
-    fault = merge_fault(fault, mk_fault(sret_vinst,
-                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
-    # sret from HS: V ← hstatus.SPV, priv ← sstatus.SPP
-    spp = ((mstatus & _u(C.MSTATUS_SPP)) != 0).astype(jnp.int32)
-    spie = (mstatus & _u(C.MSTATUS_SPIE)) != 0
-    mst_sret = mstatus
-    mst_sret = jnp.where(spie, mst_sret | _u(C.MSTATUS_SIE),
-                         mst_sret & ~_u(C.MSTATUS_SIE))
-    mst_sret = (mst_sret | _u(C.MSTATUS_SPIE)) & ~_u(C.MSTATUS_SPP)
-    spv = (hstatus & _u(C.HSTATUS_SPV)) != 0
-    hst_sret = hstatus & ~_u(C.HSTATUS_SPV)
-    # sret from VS (virt): uses vsstatus
-    vsstatus = csrs[C.R_VSSTATUS]
-    vspp = ((vsstatus & _u(C.MSTATUS_SPP)) != 0).astype(jnp.int32)
-    vspie = (vsstatus & _u(C.MSTATUS_SPIE)) != 0
-    vst_sret = vsstatus
-    vst_sret = jnp.where(vspie, vst_sret | _u(C.MSTATUS_SIE),
-                         vst_sret & ~_u(C.MSTATUS_SIE))
-    vst_sret = (vst_sret | _u(C.MSTATUS_SPIE)) & ~_u(C.MSTATUS_SPP)
-    csrs_sret_hs = csrs.at[C.R_MSTATUS].set(mst_sret).at[C.R_HSTATUS].set(
-        hst_sret)
-    csrs_sret_vs = csrs.at[C.R_VSSTATUS].set(vst_sret)
-    new_csrs = jnp.where(sret_ok & ~virt, csrs_sret_hs,
-                         jnp.where(sret_ok & virt, csrs_sret_vs, new_csrs))
-    new_priv = jnp.where(sret_ok, jnp.where(virt, vspp, spp), new_priv)
-    new_virt = jnp.where(sret_ok, jnp.where(virt, virt, spv), new_virt)
-    new_pc = jnp.where(sret_ok, jnp.where(virt, csrs[C.R_VSEPC],
-                                          csrs[C.R_SEPC]), new_pc)
-
-    # MRET
-    mret_illegal = is_mret & (priv != 3)
-    mret_ok = is_mret & ~mret_illegal
-    fault = merge_fault(fault, mk_fault(mret_illegal, C.EXC_ILLEGAL, instr))
-    mpp = ((mstatus & _u(C.MSTATUS_MPP)) >> _u(11)).astype(jnp.int32)
-    mpie = (mstatus & _u(C.MSTATUS_MPIE)) != 0
-    mpv = (mstatus & _u(C.MSTATUS_MPV)) != 0
-    mst_mret = mstatus
-    mst_mret = jnp.where(mpie, mst_mret | _u(C.MSTATUS_MIE),
-                         mst_mret & ~_u(C.MSTATUS_MIE))
-    mst_mret = (mst_mret | _u(C.MSTATUS_MPIE)) & ~_u(C.MSTATUS_MPP) & \
-        ~_u(C.MSTATUS_MPV)
-    new_csrs = jnp.where(mret_ok, csrs.at[C.R_MSTATUS].set(mst_mret),
-                         new_csrs)
-    new_priv = jnp.where(mret_ok, mpp, new_priv)
-    new_virt = jnp.where(mret_ok, (mpp != 3) & mpv, new_virt)
-    new_pc = jnp.where(mret_ok, csrs[C.R_MEPC], new_pc)
-
-    # fences (paper hfence_tests: hfence touches only guest TLB entries).
-    # sfence.vma from VS flushes the guest's own (guest-tagged) entries;
-    # hfence.{vvma,gvma} from VS raises virtual-instruction; from U illegal.
-    is_hf = is_hfence_v | is_hfence_g
-    hf_vinst = is_hf & virt
-    hf_illegal = is_hf & ~virt & (priv == 0)
-    sf_vinst = is_sfence & virt & (priv == 0)          # VU
-    sf_illegal = is_sfence & ~virt & (priv == 0)       # native U
-    fault = merge_fault(fault, mk_fault(hf_vinst | sf_vinst,
-                                        C.EXC_VIRTUAL_INSTRUCTION, instr))
-    fault = merge_fault(fault, mk_fault(hf_illegal | sf_illegal,
-                                        C.EXC_ILLEGAL, instr))
-    do_hf = is_hf & ~virt & (priv >= 1)
-    do_sf_native = is_sfence & ~virt & (priv >= 1)
-    do_sf_guest = is_sfence & virt & (priv >= 1)       # guest flushing itself
-    new_tlb = jax.tree.map(
-        lambda n, o: jnp.where(do_hf | do_sf_native | do_sf_guest, n, o),
-        TLB.flush_where(s["tlb"],
-                        cond_guest=do_hf | do_sf_guest,
-                        cond_native=do_sf_native),
-        new_tlb)
-
-    # FENCE / FENCE.I: no-op
-    # (opcode 0x0F)
+    # ---------------- SYSTEM contribution (possibly batch-gated) ------------
+    fault = merge_fault(fault, sys.fault)
+    wb = jnp.where(sys.do_wb, sys.wb, wb)
+    do_wb = do_wb | sys.do_wb
+    new_csrs = jnp.where(sys.csrs_set, sys.csrs, new_csrs)
+    new_pc = jnp.where(sys.pc_set, sys.pc, new_pc)
+    new_priv = jnp.where(sys.pv_set, sys.priv, priv)
+    new_virt = jnp.where(sys.pv_set, sys.virt, virt)
+    # flush_where is the identity when both scopes are False
+    new_tlb = TLB.flush_where(new_tlb, sys.flush_guest, sys.flush_native)
 
     # ---------------- illegal opcode ----------------------------------------
-    known = (alu_hit | is_lui | is_auipc | is_jal | is_jalr | is_br |
-             is_load | is_store | is_sys | (op == _u(0x0F)))
-    fault = merge_fault(fault, mk_fault(~known, C.EXC_ILLEGAL, instr))
-
-    # ---------------- writeback & commit ------------------------------------
+    fault = merge_fault(fault, mk_fault(cls == D.CLS_ILLEGAL,
+                                        C.EXC_ILLEGAL, instr))
     retired = ~fault.fault
-    wb_final = jnp.where(do_wb & retired & (rd != 0), wb, regs[rd])
-    new_regs = regs.at[rd].set(wb_final)
 
+    return ExecOut(fault=fault, retired=retired, new_pc=new_pc,
+                   rd=uop.rd, wb=wb, do_wb=do_wb,
+                   csrs=new_csrs, tlb=new_tlb,
+                   priv=new_priv, virt=new_virt, halt=sys.halt,
+                   mem_idx=mem_idx, mem_word=st_word, mem_commit=mem_commit,
+                   console_inc=console_inc, done_set=done_set,
+                   exit_code=rv2, ctxsw_inc=ctxsw_inc)
+
+
+def execute(state, instr):
+    """One instruction (compat path). Returns (new_state, Fault, retired).
+
+    Runs every contributor unconditionally with the always-walk
+    translation — the per-hart semantics of the staged pipeline without
+    its batch-level gating."""
+    s = state
+    uop = D.decode(instr)
+    rv1 = s["regs"][uop.rs1]
+    rv2 = s["regs"][uop.rs2]
+    q = mem_query(s["csrs"], s["priv"], s["virt"], uop, rv1)
+    xr, walked = translate_cached(s, q.addr, q.macc, force_virt=q.force_virt,
+                                  hlvx=q.hlvx)
+    sys = exec_sys(s["csrs"], s["priv"], s["virt"], s["pc"], rv1, uop)
+    eo = execute_uop(s, uop, rv1, rv2, q, xr, walked, sys)
+
+    retired = eo.retired
+    wb_final = jnp.where(eo.do_wb & retired & (eo.rd != 0), eo.wb,
+                         s["regs"][eo.rd])
     out = dict(s)
-    out["regs"] = jnp.where(retired, new_regs, regs)
-    out["pc"] = jnp.where(retired, new_pc, pc)
-    out["csrs"] = jnp.where(retired, new_csrs, csrs)
-    out["mem"] = jnp.where(retired, new_mem, s["mem"])
+    out["regs"] = s["regs"].at[eo.rd].set(wb_final)
+    out["pc"] = jnp.where(retired, eo.new_pc, s["pc"])
+    out["csrs"] = jnp.where(retired, eo.csrs, s["csrs"])
+    out["mem"] = s["mem"].at[eo.mem_idx].set(
+        jnp.where(eo.mem_commit, eo.mem_word, s["mem"][eo.mem_idx]))
     out["tlb"] = jax.tree.map(lambda n, o: jnp.where(retired, n, o),
-                              new_tlb, s["tlb"])
-    out["priv"] = jnp.where(retired, new_priv, priv)
-    out["virt"] = jnp.where(retired, new_virt, virt)
-    out["halted"] = jnp.where(retired, new_halt, s["halted"])
-    out["console"] = console
-    out["done"] = done
-    out["exit_code"] = exit_code
+                              eo.tlb, s["tlb"])
+    out["priv"] = jnp.where(retired, eo.priv, s["priv"])
+    out["virt"] = jnp.where(retired, eo.virt, s["virt"])
+    out["halted"] = jnp.where(retired, eo.halt, s["halted"])
+    out["console"] = s["console"] + eo.console_inc.astype(jnp.int64)
+    out["done"] = s["done"] | eo.done_set
+    out["exit_code"] = jnp.where(eo.done_set, eo.exit_code, s["exit_code"])
     out["ctx_switches"] = s["ctx_switches"] + \
-        (retired & ctxsw_poke).astype(jnp.int64)
-    return out, fault, retired
+        (retired & eo.ctxsw_inc).astype(jnp.int64)
+    return out, eo.fault, retired

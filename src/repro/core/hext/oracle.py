@@ -603,6 +603,68 @@ def _word_deposit(word, pa, val, size):
     return u64((word & ~(mask << off)) | ((val & mask) << off))
 
 
+def decode_fields(word: int) -> Dict:
+    """Independent instruction decoder: direct opcode tests and bit
+    slicing, no lookup tables.  Returns the micro-op record shape of
+    ``decode.decode_word`` with ``cls`` as a class *name* — the
+    decode-table sweep tests (tests/hext/test_isa_props.py) diff the two
+    decoders over random words, so a mis-built table entry and a wrong
+    immediate mux both show up as a named mismatch."""
+    word &= 0xFFFFFFFF
+    op = word & 0x7F
+    if op in (0x33, 0x13):
+        cls, fmt = "alu", ("none" if op == 0x33 else "i")
+    elif op in (0x3B, 0x1B):
+        cls, fmt = "alu32", ("none" if op == 0x3B else "i")
+    elif op == 0x37:
+        cls, fmt = "lui", "u"
+    elif op == 0x17:
+        cls, fmt = "auipc", "u"
+    elif op == 0x6F:
+        cls, fmt = "jal", "j"
+    elif op == 0x67:
+        cls, fmt = "jalr", "i"
+    elif op == 0x63:
+        cls, fmt = "branch", "b"
+    elif op == 0x03:
+        cls, fmt = "load", "i"
+    elif op == 0x23:
+        cls, fmt = "store", "s"
+    elif op == 0x73:
+        cls, fmt = "system", "none"
+    elif op == 0x0F:
+        cls, fmt = "fence", "none"
+    else:
+        cls, fmt = "illegal", "none"
+    if fmt == "i":
+        imm = sext(word >> 20, 12)
+    elif fmt == "s":
+        imm = sext(((word >> 25) << 5) | ((word >> 7) & 0x1F), 12)
+    elif fmt == "b":
+        imm = sext((((word >> 31) & 1) << 12) | (((word >> 7) & 1) << 11) |
+                   (((word >> 25) & 0x3F) << 5) |
+                   (((word >> 8) & 0xF) << 1), 13)
+    elif fmt == "u":
+        imm = sext(word & 0xFFFFF000, 32)
+    else:                                  # "j" or "none"
+        imm = 0 if fmt == "none" else \
+            sext((((word >> 31) & 1) << 20) |
+                 (((word >> 12) & 0xFF) << 12) |
+                 (((word >> 20) & 1) << 11) |
+                 (((word >> 21) & 0x3FF) << 1), 21)
+    return {
+        "cls": cls,
+        "rd": (word >> 7) & 31,
+        "rs1": (word >> 15) & 31,
+        "rs2": (word >> 20) & 31,
+        "f3": (word >> 12) & 7,
+        "f7": (word >> 25) & 0x7F,
+        "imm": imm,
+        "alu_imm": op in (0x13, 0x1B),
+        "instr": word,
+    }
+
+
 def execute(st, instr):
     """One instruction on the oracle state. Returns (fault_or_None,
     retired).  On fault, st is left with only the machine's non-reverted

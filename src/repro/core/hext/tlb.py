@@ -12,22 +12,48 @@ Entries additionally carry the privilege context (priv/SUM/MXR) their
 permission bits were composed under; a lookup from a different context
 misses instead of reusing a stale permission verdict (e.g. a U-mode access
 hitting an S-mode entry).
+
+``lookup`` returns a :class:`TlbVerdict` — a complete (hit, pa, perm_ok)
+record.  ``verdict.use`` is the machine's fast-path predicate: a usable
+hit never needs the two-stage walk graph at all (machine.step only
+materializes the walk when some hart in the batch misses — DESIGN.md §7).
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax.numpy as jnp
 
-from repro.core.hext import csr as C
 from repro.core.hext import translate as X
+from repro.core.hext.bits import u64 as _u
 
 U64 = jnp.uint64
 N_TLB = 16
 
-
-def _u(x):
-    return jnp.asarray(x, U64)
-
 PERM_R, PERM_W, PERM_X = 1, 2, 4
+
+
+class TlbVerdict(NamedTuple):
+    """Complete TLB lookup outcome for one access.
+
+    ``hit``: an entry matched (VPN + guest tag + privilege context);
+    ``pa``: the composed host-physical address of the matched entry
+    (garbage when ``hit`` is false — gate on ``hit``);
+    ``perm_ok``: the cached composed permissions allow this access.
+
+    ``use`` is the short-circuit predicate: the translation is fully
+    resolved by the TLB and the walk can be skipped.  A hit with bad
+    permissions still walks — the walk, not the TLB, determines the
+    architectural fault cause.
+    """
+
+    hit: jnp.ndarray
+    pa: jnp.ndarray
+    perm_ok: jnp.ndarray
+
+    @property
+    def use(self):
+        return self.hit & self.perm_ok
 
 
 def init_tlb():
@@ -53,9 +79,10 @@ def _vpn_mask(level):
     return ~((_u(1) << (level.astype(U64) * _u(9))) - _u(1))
 
 
-def lookup(tlb, va, virt, acc, priv, sum_bit, mxr):
-    """→ (hit, pa, perm_ok).  Matches only entries whose cached permission
-    context (priv/SUM/MXR at insert time) equals the current access's."""
+def lookup(tlb, va, virt, acc, priv, sum_bit, mxr) -> TlbVerdict:
+    """→ :class:`TlbVerdict` (unpacks as the legacy ``(hit, pa, perm_ok)``
+    triple).  Matches only entries whose cached permission context
+    (priv/SUM/MXR at insert time) equals the current access's."""
     vpn = jnp.asarray(va, U64) >> _u(12)
     lm = _vpn_mask(tlb["level"])
     match = tlb["valid"] & (tlb["guest"] == virt) & \
@@ -75,7 +102,7 @@ def lookup(tlb, va, virt, acc, priv, sum_bit, mxr):
     want = jnp.where(acc == X.ACC_R, PERM_R,
                      jnp.where(acc == X.ACC_W, PERM_W, PERM_X))
     perm_ok = (tlb["perm"][idx] & want) != 0
-    return hit, pa, perm_ok
+    return TlbVerdict(hit=hit, pa=pa, perm_ok=perm_ok)
 
 
 def compose_perms(vs_pte, g_pte, priv, sum_bit, mxr):

@@ -16,6 +16,8 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from repro.core.hext import csr as C
+from repro.core.hext.bits import read64 as _read64
+from repro.core.hext.bits import u64 as _u
 
 U64 = jnp.uint64
 
@@ -49,18 +51,6 @@ class XResult(NamedTuple):
 
 # pseudo-PTE carrying every permission (used for bare/no-paging stages)
 ALL_PERM_PTE = PTE_V | PTE_R | PTE_W | PTE_X | PTE_U | PTE_A | PTE_D
-
-
-def _u(x):
-    return jnp.asarray(x, U64)
-
-
-def _read64(mem, pa):
-    # NOTE: the wrapped index is only a safe-indexing device for traced
-    # code; a PA beyond memory raises an access fault in the walker
-    # (`_acc_cause`) and at the final access, so the wrapped value is never
-    # architecturally visible.
-    return mem[(pa >> _u(3)).astype(jnp.int32) % mem.shape[0]]
 
 
 def _acc_cause(acc):

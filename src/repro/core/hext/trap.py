@@ -15,12 +15,8 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from repro.core.hext import csr as C
-
-U64 = jnp.uint64
-
-
-def _u(x):
-    return jnp.asarray(x, U64)
+from repro.core.hext.bits import U64
+from repro.core.hext.bits import u64 as _u
 
 
 class TrapTarget(NamedTuple):

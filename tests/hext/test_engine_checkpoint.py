@@ -245,6 +245,22 @@ def test_sharded_engine_fallback_matches_jit():
         assert int(fs[i].counters.walks) == int(fj[i].counters.walks)
 
 
+def test_instrs_per_step_bit_identical():
+    """The multi-instruction dispatch knob (DESIGN.md §7d) unrolls N
+    architectural ticks per scan element — every counter and every
+    architectural field must be bit-identical to the N=1 engine."""
+    fj = _boot_sha_pair().run(30000, chunk=CHUNK)
+    for ips in (2, 8):
+        eng = engine.JitEngine(instrs_per_step=ips)
+        fu = Fleet.boot([programs.SHA()] * 2, guest=[False, True],
+                        engine=eng).run(30000, chunk=CHUNK)
+        for i in range(2):
+            assert engine.diff_states(fu[i], fj[i]) == [], f"ips={ips}"
+            _assert_states_identical(fu[i], fj[i])
+    with pytest.raises(ValueError, match="instrs_per_step"):
+        engine._check_ips(CHUNK, 3)       # 1024 % 3 != 0
+
+
 @pytest.mark.slow
 def test_sharded_engine_multi_device_matches_jit():
     """The real pmap path: 4 forced host devices, 6 harts (padding 6→8).
