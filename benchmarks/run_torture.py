@@ -34,8 +34,13 @@ def main(out_path: str = "benchmarks/results/torture_fuzz.json",
          seed: int = torture.DEFAULT_SEED, count: int = 256,
          serial_sample: int = 16, max_ticks: int = torture.MAX_TICKS):
     t0 = time.time()
-    scenarios = torture.generate(seed, count)
+    corpus = torture.generate(seed, count)
     wall_gen = time.time() - t0
+    # throughput legs use the fuzz family only: sched-family images are
+    # bigger than T_MEM_WORDS, and mixing shapes would split the single
+    # XLA executable the benchmark is about
+    scenarios = [s for s in corpus if s.family == "fuzz"]
+    n_fuzz = len(scenarios)
 
     # batched cold: the whole corpus as one Fleet, including the one-time
     # XLA compile for the (count, mem) shape
@@ -75,17 +80,25 @@ def main(out_path: str = "benchmarks/results/torture_fuzz.json",
                       engine="oracle").run(max_ticks, chunk=torture.CHUNK)
     wall_oracle = time.time() - t0
 
-    batched_rate = count / wall_batched
+    batched_rate = n_fuzz / wall_batched
     serial_rate = 1.0 / wall_serial_each
+    # coverage column: the static shape buckets the coverage-guided
+    # generator steered into over the WHOLE corpus (sched included) —
+    # the dynamic-event buckets on top of these are the nightly
+    # `--coverage-out` artifact's job, since they need an oracle pass
+    static_hist = torture.coverage_map(corpus, {})
     out = {
         "seed": seed, "count": count, "max_ticks": max_ticks,
+        "fuzz_scenarios": n_fuzz,
+        "sched_scenarios": count - n_fuzz,
         "scenarios_done": n_done,
         "wall_gen_seconds": wall_gen,
+        "coverage_buckets_static": len(static_hist),
         "fuzz_throughput": {
             "batched_scenarios_per_sec": batched_rate,
-            "batched_cold_scenarios_per_sec": count / wall_batched_cold,
+            "batched_cold_scenarios_per_sec": n_fuzz / wall_batched_cold,
             "serial_scenarios_per_sec": serial_rate,
-            "oracle_scenarios_per_sec": count / wall_oracle,
+            "oracle_scenarios_per_sec": n_fuzz / wall_oracle,
             "batched_speedup_vs_serial": batched_rate / serial_rate,
             "serial_sample": serial_sample,
         },
@@ -94,7 +107,8 @@ def main(out_path: str = "benchmarks/results/torture_fuzz.json",
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     ft = out["fuzz_throughput"]
-    print(f"{count} scenarios ({n_done} done): "
+    print(f"{n_fuzz}/{count} fuzz scenarios ({n_done} done, "
+          f"{len(static_hist)} static coverage buckets): "
           f"batched {ft['batched_scenarios_per_sec']:.2f}/s, "
           f"serial {ft['serial_scenarios_per_sec']:.2f}/s "
           f"({ft['batched_speedup_vs_serial']:.1f}x), "

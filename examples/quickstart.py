@@ -4,7 +4,8 @@ it against native execution — the paper's experiment in 30 lines.
 The optional second argument picks the execution backend (DESIGN.md §3):
 ``jit`` (default), ``sharded`` (pmap over jax.devices()), or ``oracle``
 (the pure-Python reference model — slow, but great for differential
-debugging: counters match the device engines bit-for-bit except `walks`).
+debugging: every counter, `walks` included, matches the device engines
+bit-for-bit).
 
 Run with the package on the path (see DESIGN.md §6):
 

@@ -20,8 +20,8 @@ are registered:
   This makes differential runs first-class: boot the same workloads twice
   (``engine="jit"`` / ``engine="oracle"``) and :func:`diff_states` the
   results — the torture harness (DESIGN.md §5) is now just a user of this
-  path.  The oracle deliberately excludes the software TLB and the
-  ``walks`` counter, so those leaves pass through unchanged.
+  path.  The oracle models the software TLB (scoped fences included) and
+  the ``walks`` counter bit-exactly, so the diff exclusion list is empty.
 
 Engines are resolved by name through the registry (``resolve``); any
 object with a ``run(state, max_ticks, chunk=...)`` method is accepted
@@ -55,12 +55,12 @@ __all__ = ["Engine", "JitEngine", "ShardedEngine", "OracleEngine",
 
 # The single definition of the differential comparison scope, shared by
 # `diff_states` and the torture harness's array-based diff so the two
-# paths can never silently drift apart.  `walks` and the TLB sub-pytree
-# are microarchitectural (out of the oracle's scope) — excluded by design.
+# paths can never silently drift apart.  The oracle models the software
+# TLB, so `walks` is compared exactly; the exclusion list is empty.
 DIFF_SCALARS = ("pc", "priv", "virt", "halted", "done", "exit_code",
                 "console")
-DIFF_COUNTERS = ("instret", "instret_virt", "pagefaults", "ticks",
-                 "timer_irqs", "ctx_switches")
+DIFF_COUNTERS = ("instret", "instret_virt", "pagefaults", "walks",
+                 "ticks", "timer_irqs", "ctx_switches")
 
 
 def _x64():
@@ -282,18 +282,22 @@ class ShardedEngine:
 def _snapshot_row(row) -> Dict[str, Any]:
     """Host-side plain-python snapshot of one hart (oracle state shape)."""
     c = row.counters
+    t = row.tlb
     return {
         "pc": int(row.pc), "priv": int(row.priv),
         "virt": bool(row.virt), "halted": bool(row.halted),
         "regs": np.asarray(row.regs).tolist(),
         "csrs": np.asarray(row.csrs).tolist(),
         "mem": np.asarray(row.mem).tolist(),
+        "tlb": {k: (int(v) if np.ndim(v) == 0 else
+                    np.asarray(v).tolist()) for k, v in t.items()},
         "console": int(row.console),
         "done": bool(c.done), "exit_code": int(c.exit_code),
         "instret": int(c.instret), "instret_virt": int(c.instret_virt),
         "exc_by_level": np.asarray(c.exc_by_level).tolist(),
         "int_by_level": np.asarray(c.int_by_level).tolist(),
-        "pagefaults": int(c.pagefaults), "ticks": int(c.ticks),
+        "pagefaults": int(c.pagefaults), "walks": int(c.walks),
+        "ticks": int(c.ticks),
         "timer_irqs": int(c.timer_irqs),
         "ctx_switches": int(c.ctx_switches),
     }
@@ -302,14 +306,29 @@ def _snapshot_row(row) -> Dict[str, Any]:
 def _adopt_row(ost: Dict, template):
     """Oracle final state → HartState, reusing the template's dtypes.
 
-    The oracle has no TLB model and no ``walks`` counter, so those leaves
-    pass through from the template (= the pre-run state) unchanged."""
+    The oracle models the TLB and ``walks`` too, so every leaf — the TLB
+    sub-pytree included — is adopted from the oracle's final state."""
     def u64a(x):
         return jnp.asarray(np.asarray(x, dtype=np.uint64))
 
     def i64(x):
         return jnp.asarray(int(x), jnp.int64)
 
+    def i32a(x):
+        return jnp.asarray(np.asarray(x, dtype=np.int32))
+
+    def ba(x):
+        return jnp.asarray(np.asarray(x, dtype=bool))
+
+    ot = ost["tlb"]
+    tlb = {
+        "vpn": u64a(ot["vpn"]), "ppn": u64a(ot["ppn"]),
+        "level": i32a(ot["level"]), "perm": i32a(ot["perm"]),
+        "guest": ba(ot["guest"]), "priv": i32a(ot["priv"]),
+        "sum": ba(ot["sum"]), "mxr": ba(ot["mxr"]),
+        "valid": ba(ot["valid"]),
+        "ptr": jnp.asarray(int(ot["ptr"]), jnp.int32),
+    }
     counters = dataclasses.replace(
         template.counters,
         done=jnp.asarray(bool(ost["done"]), bool),
@@ -321,6 +340,7 @@ def _adopt_row(ost: Dict, template):
         int_by_level=jnp.asarray(
             np.asarray(ost["int_by_level"], dtype=np.int64)),
         pagefaults=i64(ost["pagefaults"]),
+        walks=i64(ost["walks"]),
         ticks=i64(ost["ticks"]),
         timer_irqs=i64(ost["timer_irqs"]),
         ctx_switches=i64(ost["ctx_switches"]),
@@ -332,6 +352,7 @@ def _adopt_row(ost: Dict, template):
         priv=jnp.asarray(int(ost["priv"]), jnp.int32),
         virt=jnp.asarray(bool(ost["virt"]), bool),
         mem=u64a(ost["mem"]),
+        tlb=tlb,
         halted=jnp.asarray(bool(ost["halted"]), bool),
         console=i64(ost["console"]),
         counters=counters,
@@ -343,14 +364,24 @@ class OracleEngine:
 
     Each hart is lifted off device, stepped by ``oracle.step`` for the
     same rounded-up tick budget the device engines use (per-hart early
-    exit on ``done``), and lowered back with the template's dtypes.  TLB
-    and ``walks`` are out of the oracle's scope (DESIGN.md §5) and pass
-    through unchanged — diff everything else."""
+    exit on ``done``), and lowered back with the template's dtypes.  The
+    oracle models the software TLB and ``walks`` bit-exactly (DESIGN.md
+    §5), so every leaf is diffable.
+
+    After :meth:`run`, ``last_events`` holds one frozenset of
+    architectural-event tuples per hart (trap / fence / atp / wfi
+    signatures the oracle recorded) — the torture harness hashes these
+    into coverage buckets.  Events are observational only and are never
+    part of the differential comparison."""
 
     name = "oracle"
 
+    def __init__(self):
+        self.last_events: List[frozenset] = []
+
     def run(self, state, max_ticks: int, chunk: int = 4096):
         total = _n_chunks(max_ticks, chunk) * int(chunk)
+        self.last_events = []
         with _x64():
             if not _is_batched(state):
                 return self._run_row(state, total)
@@ -359,13 +390,13 @@ class OracleEngine:
             outs = [self._run_row(r, total) for r in rows]
             return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 
-    @staticmethod
-    def _run_row(row, total: int):
+    def _run_row(self, row, total: int):
         ost = _oracle.resume_state(_snapshot_row(row))
         for _ in range(total):
             if ost["done"]:
                 break
             _oracle.step(ost)
+        self.last_events.append(frozenset(ost.get("events", ())))
         return _adopt_row(ost, row)
 
 
@@ -442,9 +473,10 @@ def diff_states(a, b, compare_mem: bool = True) -> List[str]:
     """Field-by-field architectural diff of two scalar ``HartState`` s.
 
     Compares pc / x1..x31 / the full CSR file / priv / virt / halted /
-    done / exit_code / console / memory / all counters EXCEPT the
-    microarchitectural ``walks`` (and the TLB sub-pytree) — exactly the
-    torture harness's comparison scope, now usable on any pair of runs
-    (e.g. ``engine="jit"`` vs ``engine="oracle"`` of the same fleet)."""
+    done / exit_code / console / memory / ALL counters, ``walks``
+    included (the oracle models the software TLB, so the exclusion list
+    is empty) — exactly the torture harness's comparison scope, now
+    usable on any pair of runs (e.g. ``engine="jit"`` vs
+    ``engine="oracle"`` of the same fleet)."""
     return diff_arrays(state_arrays(a), 0, state_arrays(b), 0,
                        compare_mem=compare_mem)

@@ -289,8 +289,11 @@ class SysOut(NamedTuple):
     virt: jnp.ndarray
     pv_set: jnp.ndarray
     halt: jnp.ndarray        # WFI with nothing pending
-    flush_guest: jnp.ndarray   # TLB invalidation scopes
+    flush_guest: jnp.ndarray   # TLB invalidation: full-scope flushes
     flush_native: jnp.ndarray
+    flush_guest_addr: jnp.ndarray   # rs1≠x0: drop only entries of flush_va
+    flush_native_addr: jnp.ndarray
+    flush_va: jnp.ndarray
 
 
 def exec_sys(csrs, priv, virt, pc, rv1, uop: D.MicroOp) -> SysOut:
@@ -410,9 +413,18 @@ def exec_sys(csrs, priv, virt, pc, rv1, uop: D.MicroOp) -> SysOut:
                                         C.EXC_VIRTUAL_INSTRUCTION, instr))
     fault = merge_fault(fault, mk_fault(hf_illegal | sf_illegal,
                                         C.EXC_ILLEGAL, instr))
-    do_hf = is_hf & ~virt & (priv >= 1)
+    do_hf_v = is_hfence_v & ~virt & (priv >= 1)
+    do_hf_g = is_hfence_g & ~virt & (priv >= 1)
     do_sf_native = is_sfence & ~virt & (priv >= 1)
     do_sf_guest = is_sfence & virt & (priv >= 1)       # guest flushing itself
+    # rs1≠x0 narrows sfence.vma / hfence.vvma to the one VA page in rs1.
+    # hfence.gvma's rs1 is a guest-PHYSICAL address (>>2) and entries are
+    # tagged by guest-virtual page, so it stays a conservative full flush.
+    # rs2 (ASID/VMID) is conservatively ignored: flushing more than the
+    # named address space is architecturally permitted.
+    rs1_nz = uop.rs1 != 0
+    scoped_g = (do_hf_v | do_sf_guest) & rs1_nz
+    scoped_n = do_sf_native & rs1_nz
 
     # ---------------- merge --------------------------------------------------
     new_csrs = csrs
@@ -435,8 +447,12 @@ def exec_sys(csrs, priv, virt, pc, rv1, uop: D.MicroOp) -> SysOut:
                   pc=new_pc, pc_set=pv_set,
                   priv=new_priv, virt=new_virt, pv_set=pv_set,
                   halt=halt,
-                  flush_guest=atp_write | do_hf | do_sf_guest,
-                  flush_native=atp_write | do_sf_native)
+                  flush_guest=atp_write | do_hf_g |
+                  ((do_hf_v | do_sf_guest) & ~rs1_nz),
+                  flush_native=atp_write | (do_sf_native & ~rs1_nz),
+                  flush_guest_addr=scoped_g,
+                  flush_native_addr=scoped_n,
+                  flush_va=jnp.asarray(rv1, U64))
 
 
 # ---------------------------------------------------------------------------
@@ -693,8 +709,10 @@ def execute_uop(state, uop: D.MicroOp, rv1, rv2, q: MemQuery,
     new_pc = jnp.where(sys.pc_set, sys.pc, new_pc)
     new_priv = jnp.where(sys.pv_set, sys.priv, priv)
     new_virt = jnp.where(sys.pv_set, sys.virt, virt)
-    # flush_where is the identity when both scopes are False
-    new_tlb = TLB.flush_where(new_tlb, sys.flush_guest, sys.flush_native)
+    # flush_where is the identity when every scope is False
+    new_tlb = TLB.flush_where(new_tlb, sys.flush_guest, sys.flush_native,
+                              sys.flush_guest_addr, sys.flush_native_addr,
+                              sys.flush_va)
 
     # ---------------- illegal opcode ----------------------------------------
     fault = merge_fault(fault, mk_fault(cls == D.CLS_ILLEGAL,

@@ -161,7 +161,9 @@ def _neutral_sys(csrs) -> isa.SysOut:
     fz = isa.Fault(zb, z64, z64, z64, zb, z64)
     return isa.SysOut(fault=fz, wb=z64, do_wb=zb, csrs=csrs, csrs_set=zb,
                       pc=z64, pc_set=zb, priv=zi, virt=zb, pv_set=zb,
-                      halt=zb, flush_guest=zb, flush_native=zb)
+                      halt=zb, flush_guest=zb, flush_native=zb,
+                      flush_guest_addr=zb, flush_native_addr=zb,
+                      flush_va=z64)
 
 
 def _gather(arr2d, idx):

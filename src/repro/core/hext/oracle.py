@@ -10,12 +10,19 @@ Scope (what the oracle predicts, and the harness compares):
   pc, x1..x31, priv, virt, halted, the full CSR file, memory, done /
   exit_code / console, and the counters instret / instret_virt /
   exc_by_level / int_by_level / pagefaults / ticks / timer_irqs /
-  ctx_switches.
+  ctx_switches / walks.
 
-Deliberately out of scope (microarchitectural, excluded from the diff):
-  the software TLB and the ``walks`` counter — translation results are
-  architecturally TLB-transparent (entries are tagged with their
-  priv/SUM/MXR context), so the oracle always walks.
+The oracle carries a faithful model of the machine's software TLB
+(guest/native tagging, priv/SUM/MXR context tags, per-level VPN masks,
+round-robin replacement, scoped invalidation) so ``walks`` — and the
+architectural side effects of *stale* cached translations, which
+PTE-rewriting guests make visible — are compared exactly.  The exclusion
+list is empty: nothing the machine computes is out of diff scope.
+
+For coverage-guided fuzzing the oracle additionally records an
+architectural-event set in ``st["events"]`` (trap/fence/atp-write
+signatures); events are bookkeeping for the torture harness's coverage
+buckets and are never part of the differential compare.
 
 The oracle mirrors the machine's *documented* semantics including its
 WARL masks, aliasing, and decode quirks (e.g. unknown SYSTEM f3=0
@@ -67,6 +74,26 @@ def s64(x: int) -> int:
 # state
 # ---------------------------------------------------------------------------
 
+N_TLB = 16
+PERM_R, PERM_W, PERM_X = 1, 2, 4
+
+
+def init_tlb() -> Dict:
+    """Empty software-TLB model (mirror of ``tlb.init_tlb``)."""
+    return {
+        "vpn": [0] * N_TLB,
+        "ppn": [0] * N_TLB,
+        "level": [0] * N_TLB,
+        "perm": [0] * N_TLB,
+        "guest": [False] * N_TLB,
+        "priv": [0] * N_TLB,
+        "sum": [False] * N_TLB,
+        "mxr": [False] * N_TLB,
+        "valid": [False] * N_TLB,
+        "ptr": 0,
+    }
+
+
 def reset_state(image) -> Dict:
     """Power-on state with a memory image loaded (pc=0, M mode)."""
     return {
@@ -76,6 +103,7 @@ def reset_state(image) -> Dict:
         "priv": 3,
         "virt": False,
         "mem": [int(w) for w in image],
+        "tlb": init_tlb(),
         "halted": False,
         "done": False,
         "exit_code": 0,
@@ -85,9 +113,11 @@ def reset_state(image) -> Dict:
         "exc_by_level": [0, 0, 0],
         "int_by_level": [0, 0, 0],
         "pagefaults": 0,
+        "walks": 0,
         "ticks": 0,
         "timer_irqs": 0,
         "ctx_switches": 0,
+        "events": set(),
     }
 
 
@@ -110,6 +140,25 @@ def resume_state(snap: Dict) -> Dict:
         if len(snap[k]) != 3:
             raise ValueError(f"{k} must have 3 entries (M/HS/VS), "
                              f"got {len(snap[k])}")
+    tlb_in = snap.get("tlb")
+    if tlb_in is None:
+        tlb = init_tlb()                  # pre-TLB snapshot: cold TLB
+    else:
+        if len(tlb_in["valid"]) != N_TLB:
+            raise ValueError(f"tlb must have {N_TLB} entries, "
+                             f"got {len(tlb_in['valid'])}")
+        tlb = {
+            "vpn": [u64(int(x)) for x in tlb_in["vpn"]],
+            "ppn": [u64(int(x)) for x in tlb_in["ppn"]],
+            "level": [int(x) for x in tlb_in["level"]],
+            "perm": [int(x) for x in tlb_in["perm"]],
+            "guest": [bool(x) for x in tlb_in["guest"]],
+            "priv": [int(x) for x in tlb_in["priv"]],
+            "sum": [bool(x) for x in tlb_in["sum"]],
+            "mxr": [bool(x) for x in tlb_in["mxr"]],
+            "valid": [bool(x) for x in tlb_in["valid"]],
+            "ptr": int(tlb_in["ptr"]),
+        }
     return {
         "pc": u64(int(snap["pc"])),
         "regs": [u64(int(x)) for x in snap["regs"]],
@@ -117,6 +166,7 @@ def resume_state(snap: Dict) -> Dict:
         "priv": int(snap["priv"]),
         "virt": bool(snap["virt"]),
         "mem": [u64(int(w)) for w in snap["mem"]],
+        "tlb": tlb,
         "halted": bool(snap["halted"]),
         "done": bool(snap["done"]),
         "exit_code": u64(int(snap["exit_code"])),
@@ -126,9 +176,11 @@ def resume_state(snap: Dict) -> Dict:
         "exc_by_level": [int(x) for x in snap["exc_by_level"]],
         "int_by_level": [int(x) for x in snap["int_by_level"]],
         "pagefaults": int(snap["pagefaults"]),
+        "walks": int(snap.get("walks", 0)),
         "ticks": int(snap["ticks"]),
         "timer_irqs": int(snap["timer_irqs"]),
         "ctx_switches": int(snap["ctx_switches"]),
+        "events": set(),
     }
 
 
@@ -434,13 +486,112 @@ def translate(st, va, acc, force_virt=False, hlvx=False):
     if stage1_fault:
         return {"pa": 0, "fault": True, "cause": stage1["cause"],
                 "tval": va, "tval2": stage1["tval2"],
-                "gva": virt_eff, "implicit": stage1["implicit"]}
+                "gva": virt_eff, "implicit": stage1["implicit"],
+                "leaf": 0, "g_leaf": 0, "level": 0}
     g = g_translate(mem, hgatp_eff, gpa_out, acc_eff, mxr, cause_acc=acc)
     if g["fault"]:
         return {"pa": 0, "fault": True, "cause": g["cause"], "tval": va,
-                "tval2": g["tval2"], "gva": virt_eff, "implicit": False}
+                "tval2": g["tval2"], "gva": virt_eff, "implicit": False,
+                "leaf": 0, "g_leaf": 0, "level": 0}
+    # leaf PTEs + level feed the TLB fill (mirror of XResult.leaf_pte /
+    # g_leaf_pte / level: a pseudo all-permission PTE stands in for a
+    # disabled stage)
     return {"pa": g["pa"], "fault": False, "cause": 0, "tval": va,
-            "tval2": 0, "gva": False, "implicit": False}
+            "tval2": 0, "gva": False, "implicit": False,
+            "leaf": ALL_PERM_PTE if no_paging else stage1["leaf"],
+            "g_leaf": g["g_leaf"],
+            "level": 0 if no_paging else stage1["level"]}
+
+
+# ---------------------------------------------------------------------------
+# software-TLB model (port of tlb.lookup / insert / compose_perms /
+# flush_where + isa.tlb_fill) — bit-exact so `walks` diffs clean
+# ---------------------------------------------------------------------------
+
+def _eff_ctx(csrs, virt_eff):
+    """Effective (SUM, MXR) — vsstatus when virtualized, else mstatus."""
+    status = csrs[C.R_VSSTATUS] if virt_eff else csrs[C.R_MSTATUS]
+    return (status & C.MSTATUS_SUM) != 0, (status & C.MSTATUS_MXR) != 0
+
+
+def _lvl_mask(level):
+    """VPN bits that must match for an entry of this level (uint64)."""
+    return ~((1 << (9 * level)) - 1) & M64
+
+
+def tlb_lookup(tlb, va, virt, acc, priv, sum_bit, mxr):
+    """→ (hit, pa, perm_ok); first-match-by-index like the machine's
+    argmax.  ``pa``/``perm_ok`` are only meaningful when ``hit``."""
+    vpn = u64(va) >> 12
+    for i in range(N_TLB):
+        lm = _lvl_mask(tlb["level"][i])
+        if tlb["valid"][i] and tlb["guest"][i] == virt and \
+                tlb["priv"][i] == priv and tlb["sum"][i] == sum_bit and \
+                tlb["mxr"][i] == mxr and \
+                (vpn & lm) == (tlb["vpn"][i] & lm):
+            level = tlb["level"][i]
+            low = (1 << (12 + 9 * level)) - 1
+            pa = ((tlb["ppn"][i] << 12) & ~low & M64) | (u64(va) & low)
+            want = PERM_R if acc == ACC_R else \
+                PERM_W if acc == ACC_W else PERM_X
+            return True, pa, (tlb["perm"][i] & want) != 0
+    return False, 0, False
+
+
+def _compose_perms(vs_pte, g_pte, priv, sum_bit, mxr):
+    bits = 0
+    for acc, bit in ((ACC_R, PERM_R), (ACC_W, PERM_W), (ACC_X, PERM_X)):
+        if _leaf_ok(vs_pte, acc, priv, sum_bit, mxr, False) and \
+                _leaf_ok(g_pte, acc, 0, False, mxr, True):
+            bits |= bit
+    return bits
+
+
+def tlb_fill(st, va, xr, force_virt=False):
+    """Insert the composed translation of a successful walk (mirror of
+    ``isa.tlb_fill``): guest entries insert at 4K granularity, native
+    entries keep their superpage level; context tags come from the
+    access's effective (priv, SUM, MXR)."""
+    tlb = st["tlb"]
+    virt_eff = st["virt"] or force_virt
+    sum_bit, mxr = _eff_ctx(st["csrs"], virt_eff)
+    i = tlb["ptr"] % N_TLB
+    tlb["vpn"][i] = u64(va) >> 12
+    tlb["ppn"][i] = u64(xr["pa"]) >> 12
+    tlb["level"][i] = 0 if virt_eff else xr["level"]
+    tlb["perm"][i] = _compose_perms(xr["leaf"], xr["g_leaf"], st["priv"],
+                                    sum_bit, mxr)
+    tlb["guest"][i] = virt_eff
+    tlb["priv"][i] = st["priv"]
+    tlb["sum"][i] = sum_bit
+    tlb["mxr"][i] = mxr
+    tlb["valid"][i] = True
+    tlb["ptr"] += 1
+
+
+def tlb_flush(tlb, guest=False, native=False, va=None):
+    """Invalidate entries: full-scope per tag class, or — with ``va`` —
+    only the entries of that class whose cached translation covers the
+    VA page (the rs1≠x0 scoped fence forms)."""
+    for i in range(N_TLB):
+        if not tlb["valid"][i]:
+            continue
+        in_class = guest if tlb["guest"][i] else native
+        if not in_class:
+            continue
+        if va is not None:
+            lm = _lvl_mask(tlb["level"][i])
+            if ((u64(va) >> 12) & lm) != (tlb["vpn"][i] & lm):
+                continue
+        tlb["valid"][i] = False
+
+
+def _event(st, tag):
+    """Record an architectural-event signature for coverage bucketing
+    (never part of the differential compare)."""
+    ev = st.get("events")
+    if ev is not None:
+        ev.add(tag)
 
 
 # ---------------------------------------------------------------------------
@@ -811,7 +962,21 @@ def execute(st, instr):
                 C.EXC_LADDR_MISALIGNED
             return _fault(cause, addr, gva=virt or force_virt), False
         acc = ACC_W if is_store else ACC_R
-        xr = translate(st, addr, acc, force_virt=force_virt, hlvx=hlvx)
+        # TLB fast path (mirror of machine.execute): a usable hit skips
+        # the walk and uses the CACHED composed pa — stale entries after
+        # an unfenced PTE rewrite are architecturally visible, exactly
+        # like the machine.  HLVX never uses a hit (cached perms carry no
+        # execute-for-read override).
+        virt_d = virt or force_virt
+        sum_d, mxr_d = _eff_ctx(csrs, virt_d)
+        hit, tpa, perm_ok = tlb_lookup(st["tlb"], addr, virt_d, acc, priv,
+                                       sum_d, mxr_d)
+        use_d = hit and perm_ok and not hlvx
+        if use_d:
+            xr = {"pa": tpa, "fault": False, "cause": 0, "tval": addr,
+                  "tval2": 0, "gva": False, "implicit": False}
+        else:
+            xr = translate(st, addr, acc, force_virt=force_virt, hlvx=hlvx)
         if xr["fault"]:
             is_gpf = xr["cause"] in (C.EXC_LGUEST_PAGE_FAULT,
                                      C.EXC_SGUEST_PAGE_FAULT)
@@ -835,6 +1000,10 @@ def execute(st, instr):
                 (not is_store and is_mmio and not mmio_readable):
             cause = C.EXC_SACCESS if is_store else C.EXC_LACCESS
             return _fault(cause, addr, gva=virt or force_virt), False
+        # the access will retire → commit the data-side fill when we
+        # walked (machine: mem_ok & walked; MMIO PAs insert too)
+        if not use_d:
+            tlb_fill(st, addr, xr, force_virt=force_virt)
         if is_store:
             if is_mtimecmp_io:
                 csrs[C.R_MTIMECMP] = _word_deposit(
@@ -876,6 +1045,10 @@ def execute(st, instr):
             return _fault(C.EXC_ILLEGAL, instr), False
         if do_write:
             st["csrs"] = csrs_w
+            # satp/vsatp/hgatp writes invalidate every cached translation
+            if csr_addr in (0x180, 0x280, 0x680):
+                tlb_flush(st["tlb"], guest=True, native=True)
+                _event(st, ("atp", csr_addr, virt, priv))
         wb = old
 
     elif op == 0x73:                       # f3 == 0: priv ops
@@ -943,16 +1116,32 @@ def execute(st, instr):
                 return _fault(C.EXC_VIRTUAL_INSTRUCTION, instr), False
             if not csrs[C.R_MIP] & csrs[C.R_MIE]:
                 st["halted"] = True
+                _event(st, ("wfi", virt, priv))
         elif f7 in (0x11, 0x31):           # hfence.vvma / hfence.gvma
             if virt:
                 return _fault(C.EXC_VIRTUAL_INSTRUCTION, instr), False
             if priv == 0:
                 return _fault(C.EXC_ILLEGAL, instr), False
+            if f7 == 0x31:
+                # gvma's rs1 is a guest-physical address; entries are
+                # VA-tagged, so it is a conservative full guest flush
+                tlb_flush(st["tlb"], guest=True)
+                _event(st, ("fence", "gvma", False, virt, priv))
+            else:
+                tlb_flush(st["tlb"], guest=True,
+                          va=rv1 if rs1 != 0 else None)
+                _event(st, ("fence", "vvma", rs1 != 0, virt, priv))
         elif f7 == 0x09:                   # sfence.vma
             if virt and priv == 0:
                 return _fault(C.EXC_VIRTUAL_INSTRUCTION, instr), False
             if not virt and priv == 0:
                 return _fault(C.EXC_ILLEGAL, instr), False
+            # VS-mode sfence flushes the guest's own (guest-tagged)
+            # entries; HS/M-mode flushes native ones.  rs1≠x0 scopes the
+            # invalidation to the one VA page in rs1.
+            tlb_flush(st["tlb"], guest=virt, native=not virt,
+                      va=rv1 if rs1 != 0 else None)
+            _event(st, ("fence", "sfence", rs1 != 0, virt, priv))
         # any other f3==0 encoding retires as a no-op (machine quirk)
 
     elif op == 0x0F:
@@ -1006,9 +1195,11 @@ def step(st):
 
     take, cause = pending_interrupt(csrs, st["priv"], st["virt"])
     if take:
+        virt_b, priv_b = st["virt"], st["priv"]
         lvl = take_trap(st, st["pc"], cause, True, 0, 0, False, 0)
         st["halted"] = False
         _count_trap(st, cause, True, lvl)
+        _event(st, ("int", cause, lvl, virt_b, priv_b))
         return
 
     if st["halted"]:
@@ -1016,9 +1207,21 @@ def step(st):
             return                       # stay idle (timers advanced)
         st["halted"] = False             # WFI wake: resume executing
 
-    # fetch
+    # fetch: TLB fast path first (mirror of machine.fetch).  A miss — or
+    # a hit whose cached perms deny execute — walks and counts in
+    # `walks`; a successful walk fills unless the fetch faults/OOBs.
     pc = st["pc"]
-    xr = translate(st, pc, ACC_X)
+    virt_b, priv_b = st["virt"], st["priv"]
+    sum_f, mxr_f = _eff_ctx(csrs, virt_b)
+    hit, tpa, perm_ok = tlb_lookup(st["tlb"], pc, virt_b, ACC_X, priv_b,
+                                   sum_f, mxr_f)
+    use_f = hit and perm_ok
+    if use_f:
+        xr = {"pa": tpa, "fault": False, "cause": 0, "tval": pc,
+              "tval2": 0, "gva": False, "implicit": False}
+    else:
+        st["walks"] += 1
+        xr = translate(st, pc, ACC_X)
     nbytes = len(st["mem"]) * 8
     if xr["fault"] or xr["pa"] >= nbytes:
         if xr["fault"]:
@@ -1029,8 +1232,11 @@ def step(st):
                         f["gva"], f["tinst"])
         st["halted"] = False
         _count_trap(st, f["cause"], False, lvl)
+        _event(st, ("exc", f["cause"], lvl, virt_b, priv_b))
         return
-    word = st["mem"][xr["pa"] >> 3]
+    if not use_f:
+        tlb_fill(st, pc, xr)             # fetch-side fill commits even
+    word = st["mem"][xr["pa"] >> 3]      # if execute faults below
     instr = (word >> 32) if xr["pa"] & 4 else word & 0xFFFFFFFF
 
     virt_before = st["virt"]          # instret_virt counts the mode the
@@ -1044,6 +1250,7 @@ def step(st):
                         fault["tval2"], fault["gva"], fault["tinst"])
         st["halted"] = False
         _count_trap(st, fault["cause"], False, lvl)
+        _event(st, ("exc", fault["cause"], lvl, virt_b, priv_b))
 
 
 def run(image, max_ticks: int) -> Dict:

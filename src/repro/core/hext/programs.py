@@ -207,9 +207,16 @@ class Asm:
     def sret(self): self.emit(0x10200073)
     def mret(self): self.emit(0x30200073)
     def wfi(self): self.emit(0x10500073)
-    def sfence_vma(self): self._rtype(0x09, 0, 0, 0, 0, 0x73)
-    def hfence_vvma(self): self._rtype(0x11, 0, 0, 0, 0, 0x73)
-    def hfence_gvma(self): self._rtype(0x31, 0, 0, 0, 0, 0x73)
+    # fences: rs1≠x0 requests an address-scoped invalidation (the VA —
+    # or GPA>>2 for gvma — in rs1); rs1=x0 is the full-scope form
+    def sfence_vma(self, rs1=0, rs2=0):
+        self._rtype(0x09, rs2, rs1, 0, 0, 0x73)
+
+    def hfence_vvma(self, rs1=0, rs2=0):
+        self._rtype(0x11, rs2, rs1, 0, 0, 0x73)
+
+    def hfence_gvma(self, rs1=0, rs2=0):
+        self._rtype(0x31, rs2, rs1, 0, 0, 0x73)
 
     # hypervisor loads/stores
     def hlv_b(self, rd, rs1): self._rtype(0x30, 0, rs1, 4, rd, 0x73)

@@ -134,20 +134,44 @@ def insert(tlb, va, pa, level, perm, virt, priv, sum_bit, mxr):
     return t
 
 
-def flush(tlb, guest_only=False, native_only=False):
+def _va_match(tlb, va):
+    """Entries whose cached translation covers `va` (superpage-aware:
+    an entry invalidates if the fence VA falls anywhere in its reach)."""
+    vpn = jnp.asarray(va, U64) >> _u(12)
+    lm = _vpn_mask(tlb["level"])
+    return (vpn & lm) == (tlb["vpn"] & lm)
+
+
+def flush(tlb, guest_only=False, native_only=False, va=None):
+    """Host-python flush: full-scope per tag class, or — with ``va`` —
+    only the entries of that class that translate the given VA page
+    (the rs1≠x0 form of sfence.vma / hfence.vvma)."""
     keep = jnp.zeros((N_TLB,), bool)
     if guest_only:
         keep = ~tlb["guest"]       # hfence: drop guest entries only
     if native_only:
         keep = tlb["guest"]        # sfence: drop native entries only
+    if va is not None:
+        keep = keep | ~_va_match(tlb, va)
     t = dict(tlb)
     t["valid"] = tlb["valid"] & keep
     return t
 
 
-def flush_where(tlb, cond_guest, cond_native):
-    """Traced flush: cond_guest/cond_native are traced bools."""
+def flush_where(tlb, cond_guest, cond_native,
+                cond_guest_addr=None, cond_native_addr=None, va=None):
+    """Traced flush; all conditions are traced bools.
+
+    ``cond_guest``/``cond_native`` are the full-scope flushes (rs1=x0,
+    atp writes).  ``cond_guest_addr``/``cond_native_addr`` are the
+    address-targeted forms (rs1≠x0): only entries of that tag class
+    whose cached translation covers the ``va`` page are dropped, so a
+    guest flushing one page no longer nukes every warm entry."""
     drop = (tlb["guest"] & cond_guest) | (~tlb["guest"] & cond_native)
+    if cond_guest_addr is not None:
+        vm = _va_match(tlb, va)
+        drop = drop | (tlb["guest"] & cond_guest_addr & vm) | \
+            (~tlb["guest"] & cond_native_addr & vm)
     t = dict(tlb)
     t["valid"] = tlb["valid"] & ~drop
     return t

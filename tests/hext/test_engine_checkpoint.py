@@ -78,17 +78,17 @@ def test_engine_registry_resolution():
 
 def test_oracle_engine_differential_smoke():
     """The same native+guest pair through the jit and oracle backends must
-    agree on every architectural field (TLB/walks excluded by design) and
-    both hit the workload golden."""
+    agree on every architectural field — the oracle models the software
+    TLB too, so `walks` is in scope — and both hit the workload golden."""
     golden = programs.SHA().golden()
     fj = _boot_sha_pair().run(30000, chunk=CHUNK)
     fo = _boot_sha_pair("oracle").run(30000, chunk=CHUNK)
     for i in range(2):
         assert engine.diff_states(fj[i], fo[i]) == [], f"hart {i}"
         assert fj[i].counters.ok(golden) and fo[i].counters.ok(golden)
-    # the oracle leg really did not run on the device engine
-    assert int(fo[0].counters.walks) == 0         # out of oracle scope
+    # the oracle independently reproduced the machine's TLB-miss count
     assert int(fj[0].counters.walks) > 0
+    assert int(fo[0].counters.walks) == int(fj[0].counters.walks)
 
 
 # ---------------------------------------------------------------------------

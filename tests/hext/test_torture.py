@@ -11,7 +11,7 @@ worthless.
 import numpy as np
 import pytest
 
-from repro.core.hext import oracle, torture
+from repro.core.hext import oracle, programs, torture
 from repro.core.hext import csr as C
 
 SEED = torture.DEFAULT_SEED
@@ -32,8 +32,10 @@ def test_generator_is_deterministic():
 
 def test_corpus_covers_all_modes_and_shapes():
     """One 96-scenario draw must exercise every entry mode, both paging
-    states per stage, and at least one broken-PTE shape."""
-    cfgs = [torture.gen_scenario(SEED, k).cfg for k in range(96)]
+    states per stage, at least one broken-PTE shape, every action-block
+    kind, and the sched family."""
+    scens = torture.generate(SEED, 96)
+    cfgs = [s.cfg for s in scens if s.family == "fuzz"]
     assert {c["mode"] for c in cfgs} == set(torture.MODES)
     assert any(c["satp"]["on"] for c in cfgs)
     assert any(not c["satp"]["on"] for c in cfgs)
@@ -43,6 +45,29 @@ def test_corpus_covers_all_modes_and_shapes():
                for c in cfgs)
     assert any(c["stimecmp_delta"] is not None for c in cfgs)
     assert any(c["use_wfi"] for c in cfgs)
+    # v2: every action-block kind appears, and tables get mapped for the
+    # PTE-rewrite blocks at least once
+    kinds = {k for c in cfgs for k in c["blocks"]}
+    assert kinds == {"straight", "fuel", "pte", "tramp"}
+    assert any(c["map_tables"] for c in cfgs)
+    # sched family: every 8th case composes fuzz bodies with the
+    # preemptive N-guest scheduler
+    sched = [s.cfg for s in scens if s.family == "sched"]
+    assert len(sched) == 96 // torture.SCHED_EVERY
+    assert all(c["n_guests"] >= 2 for c in sched)
+
+
+def test_coverage_bias_and_buckets():
+    """Candidate selection is deterministic, and the static bucket map
+    of a 64-draw corpus covers modes × blocks broadly."""
+    scens = torture.generate(SEED, 64)
+    buckets = set()
+    for s in scens:
+        buckets |= set(torture._static_buckets(s.cfg))
+    assert len(buckets) > 40
+    hist = torture.coverage_map(scens, {})
+    assert len(hist) == len(buckets)
+    assert sum(hist.values()) >= len(scens)
 
 
 def test_every_scenario_terminates_under_oracle():
@@ -50,9 +75,8 @@ def test_every_scenario_terminates_under_oracle():
     the overwhelming majority of scenarios must finish well inside the
     budget (a budget-burner is legal but must stay rare)."""
     done = 0
-    for k in range(64):
-        s = torture.gen_scenario(SEED, k)
-        st = oracle.run(s.image, torture.MAX_TICKS)
+    for s in torture.generate(SEED, 64):
+        st = oracle.run(s.image, s.max_ticks)
         done += bool(st["done"])
     assert done >= 60, f"only {done}/64 scenarios terminated"
 
@@ -107,6 +131,7 @@ def test_mutated_state_is_caught_per_field():
             ("csr", lambda m: m["csrs"].__setitem__((0, C.R_MCAUSE), 99)),
             ("instret", lambda m: m.__setitem__(
                 "instret", m["instret"] + 1)),
+            ("walks", lambda m: m.__setitem__("walks", m["walks"] + 1)),
             ("mem", lambda m: m["mem"].__setitem__((0, 0x3000 // 8), 1)),
             ("exit_code", lambda m: m.__setitem__(
                 "exit_code", m["exit_code"] ^ 1))):
@@ -124,6 +149,110 @@ def test_failure_report_carries_working_repro_line():
     s = torture.gen_scenario(SEED, 42)
     s2 = torture.gen_scenario(SEED, 42)
     assert np.array_equal(s.image, s2.image)
+
+
+# ---------------------------------------------------------------------------
+# repro CLI conformance: exit status + both-model dump (bugfix satellite)
+# ---------------------------------------------------------------------------
+
+def test_repro_cli_clean_case_exits_zero(capsys):
+    assert torture.main(["--seed", str(SEED), "--case", "3"]) == 0
+    out = capsys.readouterr().out
+    assert "machine == oracle" in out
+    # the dump prints both-model values for every diffable scalar field
+    for field in torture._CASE_FIELDS:
+        assert field in out
+
+
+@pytest.mark.parametrize("field", ["x7", "walks", "exit_code"])
+def test_repro_cli_injected_fault_exits_nonzero(field, capsys):
+    rc = torture.main(["--seed", str(SEED), "--case", "3",
+                       "--inject-fault", field])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "MISMATCH" in out
+    assert f"--case 3" in out          # repro line present on failure
+
+
+def test_repro_cli_handles_sched_family_case(capsys):
+    """Sched-family images are larger than the fuzz mem budget; the
+    single-case path must pad the raw-oracle leg to the Fleet's
+    power-of-two memory instead of crashing on a shape mismatch."""
+    case = torture.SCHED_EVERY - 1       # first sched case
+    assert torture.main(["--seed", str(SEED), "--case", str(case)]) == 0
+    assert "family=sched" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# scheduler × fuzz composition (quick tier)
+# ---------------------------------------------------------------------------
+
+def _sched_smoke_scenarios(n_cases=32):
+    """32 fixed-seed v2 sched scenarios forced to N=2 guests/hart and a
+    short timeslice — the quick-tier composition smoke."""
+    scens = []
+    for k in range(n_cases):
+        rng = torture._case_rng(SEED + 1000, k)
+        cfg = torture._sample_sched_cfg(rng)
+        cfg["n_guests"], cfg["mode"] = 2, "SCHED2"
+        cfg["guests"] = cfg["guests"][:2]
+        cfg["timeslice"] = min(cfg["timeslice"], 150)
+        scens.append(torture.Scenario(
+            seed=SEED + 1000, case=k,
+            image=torture._build_sched_image(cfg), cfg=cfg))
+    return scens
+
+
+def test_sched_fuzz_smoke_one_fleet_zero_mismatches():
+    from repro.core.hext.engine import OracleEngine
+    scens = _sched_smoke_scenarios()
+    budget = 3072                        # whole chunk-scans; most finish
+    mach = torture._run_corpus_fleet(scens, budget, torture.CHUNK)
+    orac = torture._run_corpus_fleet(scens, budget, torture.CHUNK,
+                                     engine=OracleEngine())
+    fails = [k for k in range(len(scens))
+             if torture.diff_pair(mach, k, orac, k)]
+    assert fails == [], f"sched smoke mismatches in cases {fails}"
+    # the composition must actually run guest code, not just boot
+    assert all(int(mach["ctx_switches"][k]) >= 2 for k in range(len(scens)))
+
+
+# ---------------------------------------------------------------------------
+# WFI starvation guard (bugfix satellite): a guest whose only pending
+# wake source is the *scheduler's* slice timer must not deadlock
+# ---------------------------------------------------------------------------
+
+class _WfiHog(programs.Workload):
+    """Immediately parks in WFI, repeatedly, with nothing of its own
+    armed — only the HS slice timer (always re-armed by the scheduler)
+    can wake it."""
+    name = "wfihog"
+
+    def asm(self, a):
+        a.label("workload_entry")
+        for _ in range(6):
+            a.wfi()
+        a.li("a0", 0)
+        a.ret()
+
+    def golden(self):
+        return 0
+
+
+def test_wfi_with_only_sibling_timer_cannot_starve():
+    from repro.core.hext.engine import OracleEngine
+    compute = torture.FuzzGuest(
+        {"seed": 7, "n_items": 8, "wfi": False, "loops": True})
+    img = programs.build_image_nguest([_WfiHog(), compute], timeslice=120)
+    s = torture.Scenario(seed=0, case=0, image=img,
+                         cfg={"family": "sched", "mode": "SCHED2",
+                              "n_guests": 2})
+    budget = torture.SCHED_MAX_TICKS
+    ost = oracle.run(torture._pad_image(img, torture._fleet_words(img)),
+                     budget)
+    assert ost["done"], "WFI hog starved: scenario never terminated"
+    mach = torture._run_corpus_fleet([s], budget, torture.CHUNK)
+    assert torture.diff_case(mach, 0, ost) == []
 
 
 # ---------------------------------------------------------------------------
