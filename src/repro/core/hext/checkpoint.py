@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
+import tempfile
 from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
@@ -37,9 +39,14 @@ from repro.core.hext import programs as _programs
 
 FORMAT = "hext-fleet-checkpoint"
 VERSION = 1
+GUEST_FORMAT = "hext-guest-checkpoint"
+GUEST_VERSION = 1
+# per-guest migratable regions, in programs.guest_regions order
+GUEST_REGIONS = ("ctx", "gtab", "window", "mailbox", "ginfo")
 
-__all__ = ["CheckpointError", "FORMAT", "VERSION", "save", "load",
-           "schema_of", "schema_sha256", "workload_registry"]
+__all__ = ["CheckpointError", "FORMAT", "VERSION", "GUEST_FORMAT",
+           "GUEST_VERSION", "GUEST_REGIONS", "save", "load", "save_guest",
+           "load_guest", "schema_of", "schema_sha256", "workload_registry"]
 
 
 class CheckpointError(RuntimeError):
@@ -145,9 +152,33 @@ def _decode_spec(d: Dict[str, Any], reg: Dict[str, Any]):
 # save / load
 # ---------------------------------------------------------------------------
 
+def _atomic_savez(path: str, **payload) -> str:
+    """Write an ``.npz`` atomically: serialize to a temp file in the same
+    directory, fsync, then ``os.replace`` over the target.  A crash (or
+    kill) mid-write leaves the previous file intact — it can never leave
+    a truncated ``.npz`` that :class:`CheckpointError`s at recovery time,
+    exactly when the serving control plane needs its last snapshot."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".ckpt-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez_compressed(fh, **payload)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path
+
+
 def save(path: str, harts, specs: Sequence[Any],
          engine_name: str = "jit") -> str:
-    """Write the fleet's full state + spec metadata as a versioned .npz."""
+    """Write the fleet's full state + spec metadata as a versioned .npz
+    (atomically — see :func:`_atomic_savez`)."""
     arrays = _flatten(harts)
     nharts = int(arrays["pc"].shape[0]) if arrays["pc"].ndim else 1
     if len(specs) != nharts:
@@ -161,10 +192,8 @@ def save(path: str, harts, specs: Sequence[Any],
         "specs": [_encode_spec(s) for s in specs],
         "engine": engine_name,
     }
-    with open(path, "wb") as fh:
-        np.savez_compressed(fh, __meta__=np.array(json.dumps(meta)),
-                            **arrays)
-    return path
+    return _atomic_savez(path, __meta__=np.array(json.dumps(meta)),
+                         **arrays)
 
 
 def load(path: str, decode_specs: bool = True) -> Tuple[Any, List[Any]]:
@@ -222,6 +251,113 @@ def load(path: str, decode_specs: bool = True) -> Tuple[Any, List[Any]]:
         reg = workload_registry()             # built once per load
         specs = [_decode_spec(d, reg) for d in meta.get("specs", [])]
     return harts, specs
+
+
+# ---------------------------------------------------------------------------
+# per-guest checkpoints ("parking") — guest-granularity leaf extraction
+# ---------------------------------------------------------------------------
+
+def save_guest(path: str, regions: Dict[str, np.ndarray], *, n: int,
+               slot: int, timeslice: int = 0,
+               workload: Any = None) -> str:
+    """Write one guest VM's migratable state as a versioned ``.npz``.
+
+    ``regions`` maps the :data:`GUEST_REGIONS` names to the uint64 word
+    arrays lifted from the owning hart's memory
+    (``programs.guest_regions`` order: saved context, G-stage table
+    block, physical window, result mailbox, scheduler info block).  The
+    region addresses are slot-determined, so the file records ``n`` (the
+    scheduler layout) and ``slot`` — a parked guest can only resume into
+    slot ``slot`` of an N=``n`` hart.  Written atomically like fleet
+    snapshots."""
+    lay = _programs.sched_layout(int(n))
+    expect = {name: size // 8 for name, (_, size) in
+              zip(GUEST_REGIONS, _programs.guest_regions(lay, int(slot)))}
+    if set(regions) != set(GUEST_REGIONS):
+        raise CheckpointError(
+            f"regions must be exactly {sorted(GUEST_REGIONS)}, "
+            f"got {sorted(regions)}")
+    arrays = {}
+    for name in GUEST_REGIONS:
+        a = np.asarray(regions[name], dtype=np.uint64)
+        if a.shape != (expect[name],):
+            raise CheckpointError(
+                f"region {name!r}: shape {a.shape} != ({expect[name]},) "
+                f"for an N={n} layout")
+        arrays[f"region.{name}"] = a
+    schema = schema_of(arrays)
+    meta = {
+        "format": GUEST_FORMAT,
+        "version": GUEST_VERSION,
+        "schema": schema,
+        "schema_sha256": schema_sha256(schema),
+        "n": int(n),
+        "slot": int(slot),
+        "timeslice": int(timeslice),
+        "workload": None if workload is None else str(workload),
+    }
+    return _atomic_savez(path, __meta__=np.array(json.dumps(meta)),
+                         **arrays)
+
+
+def load_guest(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Read a parked-guest checkpoint → ``({region: words}, meta)``.
+
+    Raises :class:`CheckpointError` on unreadable/corrupted files, a
+    format/version mismatch, a schema-hash mismatch, or region sizes
+    inconsistent with the recorded ``(n, slot)`` layout."""
+    try:
+        z = np.load(path, allow_pickle=False)
+    except Exception as e:
+        raise CheckpointError(f"unreadable guest checkpoint {path!r}: "
+                              f"{e}") from e
+    with z:
+        if "__meta__" not in z.files:
+            raise CheckpointError(f"{path!r} has no __meta__ record — "
+                                  f"not a {GUEST_FORMAT} file")
+        try:
+            meta = json.loads(str(z["__meta__"][()]))
+            arrays = {k: z[k] for k in z.files if k != "__meta__"}
+        except Exception as e:
+            raise CheckpointError(f"corrupted guest checkpoint {path!r}: "
+                                  f"{e}") from e
+    if meta.get("format") != GUEST_FORMAT:
+        raise CheckpointError(
+            f"{path!r}: format {meta.get('format')!r} != {GUEST_FORMAT!r}")
+    if meta.get("version") != GUEST_VERSION:
+        raise CheckpointError(
+            f"{path!r}: guest checkpoint version {meta.get('version')} is "
+            f"not supported (this build reads version {GUEST_VERSION})")
+    schema = schema_of(arrays)
+    if schema_sha256(schema) != meta.get("schema_sha256") or \
+            schema != meta.get("schema"):
+        raise CheckpointError(
+            f"{path!r}: schema hash mismatch — the file is corrupted or "
+            f"was edited after save")
+    want = {f"region.{name}" for name in GUEST_REGIONS}
+    if set(arrays) != want:
+        raise CheckpointError(
+            f"{path!r}: region set {sorted(arrays)} does not match "
+            f"{sorted(want)}")
+    try:
+        n, slot = int(meta["n"]), int(meta["slot"])
+        lay = _programs.sched_layout(n)
+        sizes = {name: size // 8 for name, (_, size) in
+                 zip(GUEST_REGIONS, _programs.guest_regions(lay, slot))}
+    except Exception as e:
+        raise CheckpointError(
+            f"{path!r}: bad layout metadata (n={meta.get('n')!r}, "
+            f"slot={meta.get('slot')!r}): {e}") from e
+    regions = {}
+    for name in GUEST_REGIONS:
+        a = arrays[f"region.{name}"]
+        if a.dtype != np.uint64 or a.shape != (sizes[name],):
+            raise CheckpointError(
+                f"{path!r}: region {name!r} is {a.dtype}{a.shape}, "
+                f"expected uint64 ({sizes[name]},) for the recorded "
+                f"N={n}/slot={slot} layout")
+        regions[name] = a
+    return regions, meta
 
 
 def _to_harts(arrays: Dict[str, np.ndarray]):

@@ -586,7 +586,7 @@ def _hypervisor() -> Asm:
     return a
 
 
-def _scheduler_hypervisor(timeslice: int, n: int = 2) -> Asm:
+def _scheduler_hypervisor(timeslice: int, n: int = 2, live=None) -> Asm:
     """xvisor-lite with a preemptive round-robin scheduler: N guests per
     hart, time-sliced on the HS timer (stimecmp/STI), VSTI-style injection
     left to the guests' own vstimecmp.  Each guest owns a host-physical
@@ -598,8 +598,23 @@ def _scheduler_hypervisor(timeslice: int, n: int = 2) -> Asm:
     Each guest also gets a virtualized time base: on deschedule the
     scheduler records the guest's virtual time (``mtime + htimedelta``) in
     its context, and on resume rebuilds ``htimedelta`` so guest time
-    excludes the ticks it spent descheduled."""
+    excludes the ticks it spent descheduled.
+
+    ``live`` (default: all slots) marks which slots boot with a guest.  A
+    dead slot's ginfo.done flag is initialized to 1, so the round-robin
+    skips it exactly like a finished guest — until the control plane parks
+    a checkpointed guest into the slot and clears the flag, at which point
+    the next timer tick schedules it.  The emitted code is bit-identical
+    to the pre-``live`` scheduler when every slot is live."""
     lay = sched_layout(n)
+    if live is None:
+        live = (True,) * n
+    live = tuple(bool(x) for x in live)
+    if len(live) != n:
+        raise ValueError(f"live mask has {len(live)} entries for n={n}")
+    if not any(live):
+        raise ValueError("at least one scheduler slot must boot live")
+    entry = live.index(True)
     a = Asm(HS_ENTRY)
     a.li("t0", HS2_HANDLER)
     a.csrw(0x105, "t0")                       # stvec (HS)
@@ -612,20 +627,30 @@ def _scheduler_hypervisor(timeslice: int, n: int = 2) -> Asm:
         a.sd("t1", 8, "t0")
         a.li("t1", lay.win[i])
         a.sd("t1", 16, "t0")
-        a.sd("zero", 24, "t0")
-    # scheduler state: guest 0 is current
+        if live[i]:
+            a.sd("zero", 24, "t0")
+        else:
+            a.li("t1", 1)                     # dead slot: born finished
+            a.sd("t1", 24, "t0")
+    # scheduler state: the first live guest is current
     a.li("t0", SCHED_CUR)
-    a.sd("zero", 0, "t0")
-    a.li("t1", lay.ctx0)
+    if entry == 0:
+        a.sd("zero", 0, "t0")
+    else:
+        a.li("t1", entry)
+        a.sd("t1", 0, "t0")
+    a.li("t1", lay.ctx0 + entry * CTX_SIZE)
     a.sd("t1", 8, "t0")                       # SCHED_CURCTX
-    a.li("t1", lay.ginfo0)
+    a.li("t1", lay.ginfo0 + entry * GINFO_SIZE)
     a.sd("t1", 16, "t0")                      # SCHED_CURGI
     a.li("t1", n)
     a.sd("t1", 24, "t0")                      # SCHED_N
-    # guests 1..n-1 first activate at the kernel entry (ctx GPRs/CSRs and
-    # the virtual-time slot stay zero: their clocks start at ~0 on resume);
-    # the saved vstimecmp must start DISARMED (all-ones), not 0
-    for i in range(1, n):
+    # live non-entry guests first activate at the kernel entry (ctx
+    # GPRs/CSRs and the virtual-time slot stay zero: their clocks start at
+    # ~0 on resume); the saved vstimecmp must start DISARMED, not 0
+    for i in range(n):
+        if i == entry or not live[i]:
+            continue
         a.li("t0", lay.ctx0 + i * CTX_SIZE)
         a.li("t1", KERN_ENTRY)
         a.sd("t1", CTX_PC, "t0")
@@ -638,8 +663,8 @@ def _scheduler_hypervisor(timeslice: int, n: int = 2) -> Asm:
     a.csrw(0x603, "t0")                       # hideleg: VS interrupts → VS
     a.li("t0", 7)
     a.csrw(0x606, "t0")                       # hcounteren: guests read time
-    a.li("t0", SATP_SV39 | (lay.g_l2[0] >> 12))
-    a.csrw(0x680, "t0")                       # hgatp ← guest 0
+    a.li("t0", SATP_SV39 | (lay.g_l2[entry] >> 12))
+    a.csrw(0x680, "t0")                       # hgatp ← entry guest
     a.hfence_gvma()
     # arm the scheduler timer: sie.STIE, stimecmp = time + slice (STI stays
     # at HS — hideleg cannot delegate it — and preempts VS regardless of the
@@ -1481,9 +1506,32 @@ class Patricia(Workload):
         return acc
 
 
+class Idle(Workload):
+    """Balloon guest for the control plane: a finite busy-loop with
+    checksum 0.  `FleetService` boots one as the host tenant of a
+    resume-only hart when parked guests have no live hart to land on —
+    the scheduler needs at least one live slot to boot, and the balloon
+    keeps the round-robin alive for a few timeslices while checkpointed
+    guests are spliced into the reserved (`None`) slots."""
+    name = "idle"
+    N = 6000
+
+    def asm(self, a):
+        a.label("workload_entry")
+        a.li("a0", 0)
+        a.li("t0", self.N)
+        a.label("id_loop")
+        a.addi("t0", "t0", -1)
+        a.bnez("t0", "id_loop")
+        a.ret()
+
+    def golden(self):
+        return 0
+
+
 WORKLOADS = [BitCount(), BasicMath(), QSort(), Susan(), SHA(), CRC32(),
              Dijkstra(), StringSearch(), FFT()]
-WORKLOADS_EXTRA = [Patricia()]
+WORKLOADS_EXTRA = [Patricia(), Idle()]
 
 
 # ---------------------------------------------------------------------------
@@ -1546,15 +1594,23 @@ def build_image_nguest(workloads, timeslice: int = DEFAULT_TIMESLICE
     round-robin on timer interrupts.  Each guest gets the standard guest
     system image (kernel + workload + VS-stage tables) inside its own
     host-physical window, and a private demand-populated G-stage set.  The
-    image size grows with N (`sched_layout(n).mem_words`)."""
+    image size grows with N (`sched_layout(n).mem_words`).
+
+    Entries may be ``None``: such a slot boots parked (ginfo.done = 1, no
+    window content, no G-stage links) — a reservation the control plane
+    can later fill with a checkpointed guest via ``Fleet.resume_guest``."""
     wls = list(workloads)
+    live = tuple(wl is not None for wl in wls)
     lay = sched_layout(len(wls))
     img = Image(lay.mem_words)
     img.place_code(M_BOOT, _m_firmware(native=False,
                                        counteren=True).assemble())
     img.place_code(HS_ENTRY,
-                   _scheduler_hypervisor(timeslice, n=len(wls)).assemble())
+                   _scheduler_hypervisor(timeslice, n=len(wls),
+                                         live=live).assemble())
     for i, wl in enumerate(wls):
+        if wl is None:
+            continue
         win = _GuestWindow(img, lay.win[i])
         kern = _kernel(native=False)
         w = Asm(WORKLOAD)

@@ -420,7 +420,11 @@ class Fleet:
                         f"slot {i}: expected a workload or a length-{n} "
                         f"tuple, got {len(grp)} entries")
                 groups.append(grp)
-            specs = [HartSpec(g[0], True, "+".join(w.name for w in g),
+            # a None guest entry is a reserved slot: it boots parked
+            # (ginfo.done=1) and can later be filled via resume_guest
+            specs = [HartSpec(g[0], True,
+                              "+".join(w.name if w is not None else "~"
+                                       for w in g),
                               guests=g, timeslice=ts) for g in groups]
             states = [HartState.boot_preemptive(*g, timeslice=ts)
                       for g in groups]
@@ -591,22 +595,11 @@ class Fleet:
             done = np.asarray(self._harts.counters.done)
             virt = np.asarray(self._harts.virt)
             for i in (src, dst):
-                if done[i]:
-                    raise MigrationError(f"hart {i} has already exited")
-                if not bool(virt[i]):
-                    # paused in M firmware or inside the HS scheduler: a
-                    # context switch may be in flight (target chosen but
-                    # SCHED_CUR not yet updated), so neither SCHED_CUR
-                    # nor the context slots are authoritative
-                    raise MigrationError(
-                        f"hart {i} is not executing guest code (V=0 — "
-                        f"possibly mid context-switch); run a little "
-                        f"longer and retry")
-                if int(mem[i, programs.SCHED_CUR >> 3]) == guest:
-                    raise MigrationError(
-                        f"guest {guest} is currently scheduled on hart "
-                        f"{i}; migrate only descheduled guests (run a "
-                        f"little longer and retry)")
+                # paused in M firmware or inside the HS scheduler: a
+                # context switch may be in flight (target chosen but
+                # SCHED_CUR not yet updated), so neither SCHED_CUR
+                # nor the context slots are authoritative
+                self._check_guest_op(mem, done, virt, i, guest, "migrate")
             gi_done_w = (lay.ginfo0 + guest * programs.GINFO_SIZE + 24) >> 3
             if int(mem[src, gi_done_w]) != 0:
                 raise MigrationError(
@@ -622,19 +615,199 @@ class Fleet:
             self._harts = self._harts.replace(mem=jnp.asarray(mem, U64))
         self._generation += 1          # invalidate handed-out views
 
-        def respec(spec: HartSpec, new_guests: tuple) -> HartSpec:
-            name = "+".join(w.name if w is not None else "moved"
-                            for w in new_guests)
-            return dataclasses.replace(spec, guests=new_guests,
-                                       workload=new_guests[0], name=name)
-
         moved = s_spec.guests[guest]
         s_guests = tuple(None if k == guest else w
                          for k, w in enumerate(s_spec.guests))
         d_guests = tuple(moved if k == guest else w
                          for k, w in enumerate(d_spec.guests))
-        self._specs[src] = respec(s_spec, s_guests)
-        self._specs[dst] = respec(d_spec, d_guests)
+        self._respec_slot(src, s_guests)
+        self._respec_slot(dst, d_guests)
+        return self
+
+    def _respec_slot(self, i: int, new_guests: tuple,
+                     hole: str = "moved") -> None:
+        """Rewrite slot i's spec after a guest-level mutation; ``hole``
+        names empty (None) guest entries in the label."""
+        spec = self._specs[i]
+        name = "+".join(w.name if w is not None else hole
+                        for w in new_guests)
+        self._specs[i] = dataclasses.replace(
+            spec, guests=new_guests, workload=new_guests[0], name=name)
+
+    def _check_guest_op(self, mem, done, virt, hart: int, guest: int,
+                        verb: str) -> None:
+        """Shared park/resume precondition: the hart is paused while
+        executing guest code and slot `guest` is not currently scheduled
+        (same reasoning as :meth:`migrate_guest`)."""
+        from repro.core.hext import programs
+        if done[hart]:
+            raise MigrationError(f"hart {hart} has already exited")
+        if not bool(virt[hart]):
+            raise MigrationError(
+                f"hart {hart} is not executing guest code (V=0 — "
+                f"possibly mid context-switch); run a little longer "
+                f"and retry")
+        if int(mem[hart, programs.SCHED_CUR >> 3]) == guest:
+            raise MigrationError(
+                f"guest {guest} is currently scheduled on hart {hart}; "
+                f"{verb} only descheduled guests (run a little longer "
+                f"and retry)")
+
+    # -- guest park / resume (the control plane's evict + re-admit) ---------
+    def park_guest(self, hart: int, guest: int, path) -> str:
+        """Evict a descheduled guest VM to a per-guest checkpoint file.
+
+        Lifts the same migratable region set :meth:`migrate_guest` moves —
+        saved context, G-stage table block, 64 KiB window, result mailbox,
+        and scheduler info block — out of the hart's memory into a
+        versioned ``.npz`` (:func:`repro.core.hext.checkpoint.save_guest`):
+        a migration whose destination is a file.  The slot is then marked
+        done with a zeroed mailbox (parked away) and its spec entry
+        cleared, exactly like a migration source.  :meth:`resume_guest`
+        later splices the file into slot ``guest`` of any same-layout hart
+        (the region addresses are slot-determined, so a parked guest must
+        resume into the same slot index).
+
+        Preconditions mirror :meth:`migrate_guest` (else
+        :class:`MigrationError`): preemptive slot, hart not exited, hart
+        paused while executing guest code (V=1), guest live and not
+        currently scheduled.
+        """
+        from repro.core.hext import checkpoint, programs
+        if not (0 <= hart < len(self._specs)):
+            raise MigrationError(f"hart {hart} out of range")
+        spec = self._specs[hart]
+        if not spec.preemptive:
+            raise MigrationError(
+                f"hart {hart} ({spec.label}) is not a preemptive "
+                f"multi-guest slot")
+        n = len(spec.guests)
+        if not 0 <= guest < n:
+            raise MigrationError(f"guest {guest} out of range for N={n}")
+        if spec.guests[guest] is None:
+            raise MigrationError(f"hart {hart} guest {guest} is an "
+                                 f"empty slot — nothing to park")
+        lay = programs.sched_layout(n)
+        with _x64():
+            mem = np.array(self._harts.mem)       # writable host copy
+            done = np.asarray(self._harts.counters.done)
+            virt = np.asarray(self._harts.virt)
+            self._check_guest_op(mem, done, virt, hart, guest, "park")
+            gi_done_w = (lay.ginfo0 + guest * programs.GINFO_SIZE + 24) >> 3
+            if int(mem[hart, gi_done_w]) != 0:
+                raise MigrationError(
+                    f"hart {hart} guest {guest} already finished — "
+                    f"nothing to park")
+            # the saved ginfo block carries done=0, so the region splice
+            # alone revives the guest on resume
+            regions = {
+                name: mem[hart, base >> 3:(base + size) >> 3].copy()
+                for name, (base, size) in zip(
+                    checkpoint.GUEST_REGIONS,
+                    programs.guest_regions(lay, guest))}
+            out = checkpoint.save_guest(
+                str(path), regions, n=n, slot=guest,
+                timeslice=spec.timeslice,
+                workload=getattr(spec.guests[guest], "name", None))
+            mem[hart, gi_done_w] = 1
+            mem[hart, (lay.guest_res + 8 * guest) >> 3] = 0
+            self._harts = self._harts.replace(mem=jnp.asarray(mem, U64))
+        self._generation += 1
+        self._respec_slot(hart, tuple(
+            None if k == guest else w
+            for k, w in enumerate(spec.guests)), hole="parked")
+        return out
+
+    def resume_guest(self, hart: int, path,
+                     workload: Optional[Any] = None) -> "Fleet":
+        """Splice a parked guest checkpoint into its slot on hart `hart`.
+
+        The checkpoint's region set is written at the slot-determined
+        addresses (slot index comes from the file); the restored info
+        block carries ``done=0``, so the destination scheduler picks the
+        guest up at its next timer tick and resumes it mid-flight — the
+        context's frozen virtual time rebuilds ``htimedelta`` against the
+        destination's own clock, like :meth:`migrate_guest`.
+
+        The destination slot must not be live: either a ``None`` entry
+        (boot-time reservation, or a tenant that migrated/parked away) or
+        a finished tenant — in the latter case the tenant's recorded
+        mailbox result is overwritten, so harvest it first.  ``workload``
+        sets the spec entry for golden checks; by default the stored
+        workload name is resolved via the standard registry.
+
+        Preconditions (else :class:`MigrationError`): preemptive slot
+        with the checkpoint's layout (same N), hart not exited, hart
+        paused while executing guest code (V=1), destination slot not
+        live.
+        """
+        from repro.core.hext import checkpoint, programs
+        regions, meta = checkpoint.load_guest(str(path))
+        if not (0 <= hart < len(self._specs)):
+            raise MigrationError(f"hart {hart} out of range")
+        spec = self._specs[hart]
+        if not spec.preemptive:
+            raise MigrationError(
+                f"hart {hart} ({spec.label}) is not a preemptive "
+                f"multi-guest slot")
+        n = len(spec.guests)
+        if n != int(meta["n"]):
+            raise MigrationError(
+                f"guest checkpoint has an N={meta['n']} layout but hart "
+                f"{hart} runs N={n}")
+        guest = int(meta["slot"])
+        if workload is None and meta.get("workload"):
+            workload = checkpoint.workload_registry().get(meta["workload"])
+        if workload is None:
+            raise MigrationError(
+                f"cannot resolve workload {meta.get('workload')!r} from "
+                f"the guest checkpoint — pass workload= explicitly")
+        lay = programs.sched_layout(n)
+        with _x64():
+            mem = np.array(self._harts.mem)       # writable host copy
+            done = np.asarray(self._harts.counters.done)
+            virt = np.asarray(self._harts.virt)
+            self._check_guest_op(mem, done, virt, hart, guest, "resume")
+            gi_done_w = (lay.ginfo0 + guest * programs.GINFO_SIZE + 24) >> 3
+            if spec.guests[guest] is not None and \
+                    int(mem[hart, gi_done_w]) == 0:
+                raise MigrationError(
+                    f"hart {hart} guest slot {guest} is still live — "
+                    f"park or migrate it first")
+            for name, (base, size) in zip(checkpoint.GUEST_REGIONS,
+                                          programs.guest_regions(lay,
+                                                                 guest)):
+                mem[hart, base >> 3:(base + size) >> 3] = regions[name]
+            self._harts = self._harts.replace(mem=jnp.asarray(mem, U64))
+        self._generation += 1
+        self._respec_slot(hart, tuple(
+            workload if k == guest else w
+            for k, w in enumerate(spec.guests)))
+        return self
+
+    def replace_hart(self, i: int, state: HartState,
+                     spec: Optional[HartSpec] = None) -> "Fleet":
+        """Splice one hart's full state (and optionally its spec) into the
+        batch in place — the control plane's provision/recover primitive:
+        lanes keep the fleet's compiled shapes (same batch size, same
+        mem_words) while tenants come and go.  ``state`` must carry
+        scalar (unbatched) leaves matching the fleet's per-hart shapes.
+        """
+        if not (0 <= i < len(self._specs)):
+            raise ValueError(f"hart {i} out of range")
+        with _x64():
+            want = tuple(self._harts.mem.shape[1:])
+            got = tuple(jnp.shape(state.mem))
+            if got != want:
+                raise ValueError(
+                    f"hart {i}: state.mem shape {got} != fleet per-hart "
+                    f"shape {want} (lanes must keep the compiled shape)")
+            self._harts = jax.tree.map(
+                lambda b, s: b.at[i].set(jnp.asarray(s, b.dtype)),
+                self._harts, state)
+        if spec is not None:
+            self._specs[i] = spec
+        self._generation += 1
         return self
 
     # -- inspection ---------------------------------------------------------

@@ -1,2 +1,5 @@
-"""Distributed runtime: sharding resolution, train/serve step builders,
-fault tolerance."""
+"""Distributed runtime: sharding resolution and the train step builder.
+
+The old serve loop and fault-tolerance scaffolding moved into the
+hypervisor control plane (``repro.core.hext.service`` /
+``repro.core.hext.policies``)."""

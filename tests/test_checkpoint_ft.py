@@ -1,4 +1,10 @@
-"""Checkpoint/restore, preemption, elasticity, and supervisor retry tests."""
+"""Checkpoint/restore tests (train-side Checkpointer / CheckpointManager).
+
+The old fault-tolerance scaffolding tests (TrainSupervisor /
+ElasticMeshManager / HeartbeatMonitor) left with
+``repro.runtime.fault_tolerance``; its straggler accounting and
+retry-with-restore loop live on in the hypervisor control plane and are
+covered by ``tests/hext/test_service.py``."""
 import os
 
 import jax
@@ -8,8 +14,6 @@ import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.checkpoint.manager import CheckpointManager
-from repro.runtime.fault_tolerance import (ElasticMeshManager,
-                                           HeartbeatMonitor, TrainSupervisor)
 
 
 def _tree(seed=0):
@@ -50,50 +54,6 @@ def test_manager_keep_n_and_resume(tmp_path):
     # keep=2 garbage collection
     kept = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
     assert len(kept) <= 2
-
-
-def test_supervisor_retries_through_injected_failures(tmp_path):
-    mgr = CheckpointManager(str(tmp_path), every=1, keep=3,
-                            async_save=False)
-    calls = {"n": 0}
-
-    def step_fn(state, step):
-        calls["n"] += 1
-        if calls["n"] in (3, 7):          # inject two transient faults
-            raise RuntimeError("injected chip failure")
-        state = {"x": state["x"] + 1}
-        mgr.maybe_save(step, state)
-        return state
-
-    def restore_fn():
-        st, sp = mgr.restore_or_init(lambda: {"x": jnp.zeros(())})
-        return st, sp
-
-    sup = TrainSupervisor(step_fn, lambda s, st: mgr.maybe_save(s, st,
-                                                                force=True),
-                          restore_fn, max_retries=3)
-    state, step = sup.run({"x": jnp.zeros(())}, 0, 10)
-    assert step == 10
-    assert len(sup.failures) == 2
-    assert float(state["x"]) > 0
-
-
-def test_elastic_mesh_plan():
-    em = ElasticMeshManager(model_axis=16)
-    plan = em.plan(512, dead_chips=[17, 300])   # two dead chips, 2 groups
-    assert plan["mesh_shape"][1] == 16
-    assert plan["mesh_shape"][0] == 30          # 32 groups - 2
-    assert abs(plan["microbatch_scale"] - 32 / 30) < 1e-9
-
-
-def test_heartbeat_straggler_detection():
-    hm = HeartbeatMonitor(4, straggler_factor=2.0)
-    import time
-    for w in range(4):
-        for _ in range(5):
-            hm.heartbeat(w, step_time=1.0)
-    hm.heartbeat(2, step_time=5.0)              # straggler
-    assert hm.stragglers() == [2]
 
 
 def test_restore_with_resharding_specs(tmp_path):
